@@ -1,0 +1,92 @@
+"""Shared benchmark scaffolding: cached counters, eval frame sets,
+timing helper."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.data.synthetic import DATASETS, SceneSpec, make_scene, revisit_frames
+
+MINI = SceneSpec("mini", 512, (20, 30), (10, 24), cloud_fraction=0.2)
+
+# scaled-down dataset analogues the benchmarks sweep (Table I)
+BENCH_DATASETS = {
+    "xview": SceneSpec("xview", 768, (30, 60), (8, 20), cloud_fraction=0.3),
+    "dota": SceneSpec("dota", 768, (22, 45), (10, 32), cloud_fraction=0.3),
+    "uavod": SceneSpec("uavod", 512, (8, 24), (12, 40), cloud_fraction=0.2),
+}
+
+_counters = None
+
+
+def counters():
+    """Train-once (disk-cached) reduced counters shared by all figures."""
+    global _counters
+    if _counters is None:
+        from repro.launch.serve import get_counters
+        _counters = get_counters(train_steps=(500, 1400), scene=MINI)
+    return _counters
+
+
+def frames_for(spec: SceneSpec, n_scenes=2, revisits=3, seed=1):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_scenes):
+        img, b, c = make_scene(rng, spec)
+        out += revisit_frames(rng, img, b, c, revisits)
+    return out
+
+
+def time_us(fn, *args, warmup=1, iters=3):
+    """Median wall time of fn(*args) in microseconds (post-warmup)."""
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r) if hasattr(r, "block_until_ready") else None
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+        else:
+            jax.tree_util.tree_map(
+                lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def run_method(frames, method, **kw):
+    space, ground = counters()
+    pcfg = PipelineConfig(method=method, score_thresh=0.25, **kw)
+    return run_pipeline(frames, space, ground, pcfg)
+
+
+_thresholds = {}
+
+
+def tuned_thresholds(spec: SceneSpec, seed=99):
+    """Paper-faithful (conf_p, conf_q) selection: small grid search on a
+    held-out calibration frame set (§III-D: 'strategically selecting the
+    optimal confidence threshold is crucial'). Cached per dataset."""
+    key = spec.name
+    if key in _thresholds:
+        return _thresholds[key]
+    frames = frames_for(spec, n_scenes=1, revisits=2, seed=seed)
+    best = (0.10, 0.55)
+    best_cmae = np.inf
+    for p in (0.02, 0.10, 0.25):
+        for q in (0.5, 0.7, 0.85):
+            if q <= p:
+                continue
+            r = run_method(frames, "targetfuse", conf_p=p, conf_q=q)
+            if r.cmae < best_cmae:
+                best_cmae, best = r.cmae, (p, q)
+    _thresholds[key] = best
+    return best

@@ -1,0 +1,24 @@
+"""Fig. 6: the three downlink policies (Low-Conf-First / Fixed Conf /
+Dynamic Conf) across contact times and conf_p sweep.
+
+Claim checked: Dynamic Conf >= the other policies across contact times;
+conf_p has an interior optimum when bandwidth is ample.
+"""
+from __future__ import annotations
+
+from benchmarks.common import MINI, frames_for, run_method
+
+
+def run():
+    frames = frames_for(MINI)
+    rows = []
+    for contact_s in (60.0, 180.0, 360.0, 720.0):
+        for policy in ("low_conf_first", "fixed_conf", "dynamic_conf"):
+            r = run_method(frames, "targetfuse", policy=policy,
+                           contact_s=contact_s)
+            rows.append((f"fig6_{policy}_t{int(contact_s)}", 0.0,
+                         f"cmae={r.cmae:.3f};down={r.tiles_downlinked}"))
+    for conf_p in (0.0, 0.1, 0.2, 0.35, 0.5):
+        r = run_method(frames, "targetfuse", conf_p=conf_p)
+        rows.append((f"fig6_confp_{conf_p}", 0.0, f"cmae={r.cmae:.3f}"))
+    return rows

@@ -1,0 +1,25 @@
+"""Fig. 8: CMAE across computational energy budgets x hardware x contact
+time.
+
+Claims checked: longer contact -> lower CMAE at a fixed energy budget;
+more energy -> lower CMAE; RPi4-class beats Atlas-class at equal budget
+(it processes ~2x the tiles per joule).
+"""
+from __future__ import annotations
+
+from benchmarks.common import MINI, frames_for, run_method
+from repro.core.energy import ATLAS, RPI4
+
+
+def run():
+    frames = frames_for(MINI)
+    rows = []
+    for hw in (RPI4, ATLAS):
+        for budget in (40_000, 80_000, 150_000, 260_000):
+            for contact in (180.0, 360.0):
+                r = run_method(frames, "targetfuse", hardware=hw,
+                               energy_budget_j=budget, contact_s=contact)
+                rows.append((
+                    f"fig8_{hw.name}_E{budget // 1000}k_t{int(contact)}", 0.0,
+                    f"cmae={r.cmae:.3f};proc={r.tiles_processed_space}"))
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 9: hardware comparison at fixed energy (150 KJ/day, xview-like,
+space tier = yolov3-tiny-class counter).
+
+Claim checked: the low-power tier (RPI4) achieves lower CMAE than Atlas
+for the same contact time (it affords more onboard processing).
+"""
+from __future__ import annotations
+
+from benchmarks.common import BENCH_DATASETS, frames_for, run_method
+from repro.core.energy import ATLAS, RPI4
+
+
+def run():
+    frames = frames_for(BENCH_DATASETS["xview"])
+    rows = []
+    reduction = {}
+    for hw in (RPI4, ATLAS):
+        for contact in (90.0, 180.0, 360.0):
+            r = run_method(frames, "targetfuse", hardware=hw,
+                           energy_budget_j=150_000, contact_s=contact)
+            reduction[(hw.name, contact)] = r.cmae
+            rows.append((f"fig9_{hw.name}_t{int(contact)}", 0.0,
+                         f"cmae={r.cmae:.3f};proc={r.tiles_processed_space}"))
+    avg_rpi = sum(v for (h, _), v in reduction.items() if h == "rpi4") / 3
+    avg_atl = sum(v for (h, _), v in reduction.items() if h == "atlas") / 3
+    pct = 100.0 * (avg_atl - avg_rpi) / max(avg_atl, 1e-9)
+    rows.append(("fig9_rpi4_cmae_reduction_pct", 0.0, f"{pct:.0f}%"))
+    return rows

@@ -1,0 +1,47 @@
+"""Kernel micro-benchmarks: us/call of each kernel's public op (XLA
+fallback path on CPU; on TPU the same entry points hit the Pallas
+kernels) + interpret-mode overhead note."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_us
+from repro.kernels import ops, ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    q = jax.random.normal(key, (4, 256, 8, 128), jnp.float32)
+    k = jax.random.normal(key, (4, 256, 2, 128), jnp.float32)
+    v = jax.random.normal(key, (4, 256, 2, 128), jnp.float32)
+    attn = jax.jit(lambda q, k, v: ops.attention(q, k, v, causal=True))
+    rows.append(("kernel_attention_b4s256h8", time_us(attn, q, k, v),
+                 "gqa causal fwd"))
+
+    tiles = jax.random.uniform(key, (512, 64, 64, 3))
+    mom = jax.jit(ops.tile_moments)
+    rows.append(("kernel_tile_moments_512x64", time_us(mom, tiles),
+                 "3 moments fused"))
+
+    x = jax.random.normal(key, (4096, 9))
+    c = jax.random.normal(key, (64, 9))
+    ka = jax.jit(ops.kmeans_assign)
+    rows.append(("kernel_kmeans_assign_4096x64", time_us(ka, x, c),
+                 "dist+argmin fused"))
+
+    b1 = jax.random.uniform(key, (512, 4))
+    b2 = jax.random.uniform(key, (512, 4))
+    iou = jax.jit(ops.iou_matrix)
+    rows.append(("kernel_iou_512x512", time_us(iou, b1, b2), "nms matrix"))
+
+    xq = jax.random.randint(key, (256, 512), -127, 128, jnp.int8)
+    wq = jax.random.randint(key, (512, 256), -127, 128, jnp.int8)
+    xs = jnp.ones((256,))
+    ws = jnp.ones((256,))
+    i8 = jax.jit(ops.int8_matmul)
+    rows.append(("kernel_int8_matmul_256x512x256", time_us(i8, xq, wq, xs, ws),
+                 "quantized onboard path"))
+    return rows

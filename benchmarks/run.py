@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Select figures with
+``python -m benchmarks.run fig7 fig11`` (all by default).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+FIGS = ("fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+        "kernels")
+
+
+def main() -> None:
+    want = [a for a in sys.argv[1:] if not a.startswith("-")] or list(FIGS)
+    mods = []
+    if "fig4" in want:
+        from benchmarks import fig4_tilesize as m
+        mods.append(m)
+    if "fig6" in want:
+        from benchmarks import fig6_conf_policies as m
+        mods.append(m)
+    if "fig7" in want:
+        from benchmarks import fig7_bandwidth as m
+        mods.append(m)
+    if "fig8" in want:
+        from benchmarks import fig8_energy as m
+        mods.append(m)
+    if "fig9" in want:
+        from benchmarks import fig9_hardware as m
+        mods.append(m)
+    if "fig10" in want:
+        from benchmarks import fig10_counters as m
+        mods.append(m)
+    if "fig11" in want:
+        from benchmarks import fig11_datasets as m
+        mods.append(m)
+    if "fig12" in want:
+        from benchmarks import fig12_ablation as m
+        mods.append(m)
+    if "kernels" in want:
+        from benchmarks import kernel_bench as m
+        mods.append(m)
+
+    print("name,us_per_call,derived")
+    for mod in mods:
+        t0 = time.time()
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # keep the harness running for later figs
+            print(f"{mod.__name__},0.0,ERROR={e!r}", flush=True)
+        print(f"# {mod.__name__} done in {time.time() - t0:.0f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Assemble the final EXPERIMENTS.md: keeps the hand-written §Perf log,
+regenerates §Dry-run/§Roofline tables from artifacts, summarizes
+§Paper-repro from bench_output.txt.
+
+  PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.report import dryrun_table, roofline_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def paper_repro_section() -> str:
+    path = os.path.join(ROOT, "bench_output.txt")
+    if not os.path.exists(path):
+        return "(bench_output.txt not found — run benchmarks first)"
+    rows = {}
+    for line in open(path):
+        line = line.strip()
+        if "," in line and not line.startswith(("name,", "#")):
+            parts = line.split(",", 2)
+            if len(parts) == 3:
+                rows[parts[0]] = parts[2]
+
+    def g(k, default="n/a"):
+        return rows.get(k, default)
+
+    lines = [
+        "| paper claim | paper value | measured (this repro) |",
+        "|---|---|---|",
+        f"| error reduction vs Space-Only (Fig. 11, unlimited downlink) | 3.4x avg | {g('fig11_error_reduction_vs_space_only')} |",
+        f"| bandwidth efficiency vs TIANSUAN (Fig. 7) | 9.6x | {g('fig7_bandwidth_efficiency_vs_tiansuan')} |",
+        f"| clustering downlink-volume ratio (Fig. 12a) | ~0.33 | {g('fig12a_downlink_volume_ratio')} |",
+        f"| RPi4 CMAE reduction vs Atlas (Fig. 9) | ~34% | {g('fig9_rpi4_cmae_reduction_pct')} |",
+        f"| tile size has interior optimum + Alg. 1 finds it (Fig. 4) | — | {g('fig4_alg1_choice')} |",
+        "",
+        "Full per-figure CSV in `bench_output.txt` (method x bandwidth x "
+        "energy x hardware x dataset sweeps, all five baselines).",
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    src = open(path).read()
+    head = src.split("## §Dry-run / §Roofline / §Paper-repro")[0]
+
+    doc = head + """## §Dry-run
+
+Both production meshes lower + compile for every (arch x shape) cell —
+40/40 on the single-pod 16x16 (=256 chip) mesh and 40/40 on the
+multi-pod 2x16x16 (=512 chip) mesh (plus the paper's own arch), with the
+"pod" axis carrying cross-pod data parallelism. Logs:
+`/tmp/matrix_single_v2.log`, `/tmp/matrix_multi_v2.log`; artifacts under
+`artifacts/dryrun/`.
+
+### single-pod (256 chips) — compile + memory + collective schedule
+
+""" + dryrun_table("single") + """
+
+### multi-pod (512 chips) — compile-proof pass
+
+Multi-pod cells compile with scan-over-layers (fast compile; per-layer
+costs are counted once per scan body, so FLOPs/useful columns are NOT
+comparable to the single-pod table — the roofline analysis below is
+single-pod per the assignment).
+
+""" + dryrun_table("multi") + """
+
+## §Roofline (single-pod, 256 chips)
+
+Terms in seconds/step: compute = FLOPs/dev / 197e12, memory =
+bytes/dev / 819e9 (floored at one pass over program args+outputs),
+collective = collective-bytes/dev / 50e9. `useful` =
+MODEL_FLOPS / (FLOPs/dev x 256); `roofline frac` = useful-FLOP time /
+dominant-term time. CPU-backend bf16-emulation converts are subtracted
+(see methodology); raw values live in the artifacts.
+
+""" + roofline_table("single") + """
+
+### Reading the table (post-hillclimb)
+
+- **Train cells** sit at useful 0.76-1.00; the dominant term is the
+  activation/gradient collective volume (qwen3 train: 1.10 s useful
+  compute vs 4.38 s collective -> frac 0.25). Next lever (documented,
+  not yet landed): bf16 collectives (CPU lowers them f32 — exactly 2x)
+  and reduce-scatter+all-gather instead of all-reduce for TP
+  activations (another 2x), which would put qwen3 train at frac ~0.5+.
+- **LM decode cells** went from useful 0.01 to 0.82-0.90 (flash-decode
+  cache layout); their absolute bound is ~1 ms/step — decode at 32k is
+  HBM/ICI-bound by nature, and `roofline frac` ~0.1 reflects decode's
+  intrinsically low arithmetic intensity, not waste.
+- **Vision/DiT cells** run pure-DP where the batch covers the mesh
+  (useful 0.94-1.00); what remains is the gradient all-reduce at
+  1 image/chip — the classic DP floor.
+- **UNet cells** are the weakest (useful 0.15-0.33): conv-heavy
+  spatial models pay XLA resharding between conv (channel-TP) and
+  attention (head-TP) layouts; a dedicated spatial-partitioning pass is
+  the known fix and is left as future work (noted, baseline-only per
+  the assignment).
+
+## §Paper-repro (TargetFuse claims)
+
+""" + paper_repro_section() + """
+
+## §Memory fit (per-device, single-pod)
+
+`memory_analysis()` argument bytes per device stay under HBM for every
+cell (largest: qwen3-8b train_4k at ~5.1 GB/dev for params + optimizer
++ batch; deepseek long_500k cache at ~2.1 GB/dev). CPU-backend temp
+bytes are an upper bound (the CPU scheduler keeps whole-layer
+activations live; the TPU compiler with remat + donation does not) —
+grad-accum (`--grad-accum`) and ZeRO-1 (`--zero1`) are provided and
+lower+compile for the cells where tighter fits are needed.
+"""
+    open(path, "w").write(doc)
+    print(f"EXPERIMENTS.md written ({len(doc)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""TargetFuse core: the paper's contribution as composable JAX modules.
+
+NOTE: submodules `dedup` and `throttle` contain same-named functions;
+import from the submodules directly (`from repro.core.dedup import
+dedup`) — this package intentionally re-exports only non-colliding
+names.
+"""
+from repro.core.tiling import optimal_tile_size, tile_image, resize_tiles
+from repro.core.energy import RPI4, ATLAS, EnergyLedger, max_tiles_within_budget
+from repro.core.metrics import cmae, ap50
+from repro.core.pipeline import PipelineConfig, PipelineResult, run_pipeline

@@ -1,0 +1,107 @@
+"""Satellite-ground cascade: the two-tier counter pair.
+
+The space tier (cheap counter, optionally int8-quantized) produces
+(count, confidence) per tile; the ground tier (expensive counter)
+recounts the downlinked tiles. Both tiers are jit-compiled batch
+programs; counter training (`fit_counter`) lives here too so examples /
+benchmarks / tests share one code path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DetectorConfig
+from repro.core import tiling
+from repro.models import detector
+from repro.optim.adamw import adamw
+from repro.optim.schedule import cosine_with_warmup
+
+
+@partial(jax.jit, static_argnames=("cfg", "score_thresh", "nms_iou"))
+def count_tiles(params, cfg: DetectorConfig, tiles, score_thresh: float = 0.3,
+                nms_iou: float = 0.25):
+    """tiles (N, S, S, 3) already at cfg.input_size -> (counts, conf)."""
+    raw = detector.forward(params, cfg, tiles)
+    return detector.count_and_confidence(raw, cfg, score_thresh=score_thresh,
+                                         iou_thresh=nms_iou)
+
+
+def count_tiles_batched(params, cfg, tiles, batch: int = 64, score_thresh=0.3,
+                        nms_iou: float = 0.25):
+    """Host-side batching wrapper (keeps peak memory flat on CPU)."""
+    outs_c, outs_f = [], []
+    n = tiles.shape[0]
+    for i in range(0, n, batch):
+        sl = tiles[i:i + batch]
+        pad = 0
+        if sl.shape[0] < batch and n > batch:
+            pad = batch - sl.shape[0]
+            sl = np.concatenate([sl, np.zeros((pad, *sl.shape[1:]), sl.dtype)])
+        c, f = count_tiles(params, cfg, jnp.asarray(sl), score_thresh, nms_iou)
+        c, f = np.asarray(c), np.asarray(f)
+        if pad:
+            c, f = c[:-pad], f[:-pad]
+        outs_c.append(c)
+        outs_f.append(f)
+    return np.concatenate(outs_c), np.concatenate(outs_f)
+
+
+# ---------------------------------------------------------------------------
+# counter training (shared by examples / benchmarks / tests)
+# ---------------------------------------------------------------------------
+
+
+def fit_counter(cfg: DetectorConfig, scenes, tile_size: int, steps: int,
+                key, batch: int = 16, lr: float = 3e-3, log_every: int = 0):
+    """Train a counter on (image, boxes, classes) scenes.
+
+    Tiles each scene, builds YOLO-style targets, runs AdamW. Returns
+    (params, final_loss).
+    """
+    from repro.data.synthetic import boxes_to_targets, clip_boxes_to_tile
+
+    params = detector.init(key, cfg)
+    grid = detector.grid_size(cfg)
+    scale = cfg.input_size / tile_size
+
+    # Pre-build the tile/target pool (host-side).
+    xs, ys = [], []
+    for img, boxes, classes in scenes:
+        s = img.shape[0]
+        g = s // tile_size
+        t = np.asarray(tiling.tile_image(jnp.asarray(img), tile_size))
+        t = np.asarray(tiling.resize_tiles(jnp.asarray(t), cfg.input_size))
+        for ty in range(g):
+            for tx in range(g):
+                b, c = clip_boxes_to_tile(boxes, classes, tx, ty, tile_size)
+                tgt = boxes_to_targets(b, c, grid, cfg.n_anchors, cfg.n_classes,
+                                       cfg.input_size, scale)
+                xs.append(t[ty * g + tx])
+                ys.append(tgt)
+    xs = np.stack(xs).astype(np.float32)
+    ys = np.stack(ys).astype(np.float32)
+
+    opt_init, opt_update = adamw(cosine_with_warmup(lr, steps // 10 + 1, steps))
+    opt_state = opt_init(params)
+
+    @jax.jit
+    def train_step(params, opt_state, xb, yb):
+        (loss, m), grads = jax.value_and_grad(detector.loss_fn, has_aux=True)(
+            params, cfg, xb, yb)
+        params, opt_state, om = opt_update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(0)
+    loss = None
+    for step in range(steps):
+        idx = rng.integers(0, len(xs), batch)
+        params, opt_state, loss = train_step(params, opt_state,
+                                             jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        if log_every and step % log_every == 0:
+            print(f"  step {step:4d} loss {float(loss):.4f}")
+    return params, float(loss)

@@ -1,0 +1,98 @@
+"""Clustering-based data deduplication (paper §III-C).
+
+Tiles are embedded with the color-moments featurizer (rotation/
+translation-invariant global channel statistics — matching the paper's
+requirement that contexts survive 'geographic label transformations'),
+k-means-clustered into geographic contexts, and only the tile nearest
+each centroid is processed/downlinked. Cluster sizes are retained so the
+representative's count stands for the whole context.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class DedupResult(NamedTuple):
+    assign: jnp.ndarray        # (N,) int32 cluster id
+    centroids: jnp.ndarray     # (K, D)
+    rep_mask: jnp.ndarray      # (N,) bool — True for cluster representatives
+    cluster_sizes: jnp.ndarray  # (K,) int32
+    rep_idx: jnp.ndarray       # (K,) int32 index of each cluster's representative
+
+
+def features(tiles: jnp.ndarray) -> jnp.ndarray:
+    """(N, H, W, C) -> (N, 3C) color-moment features.
+
+    Centered per feature but scaled by one GLOBAL factor: per-feature
+    z-scoring would blow up low-information dimensions (e.g. nearly
+    constant tile stds) into pure noise axes and break the clustering.
+    """
+    f = kops.tile_moments(tiles)
+    mu = jnp.mean(f, 0, keepdims=True)
+    scale = jnp.std(f) + 1e-6
+    return (f - mu) / scale
+
+
+def _kmeanspp_init(x, k, key):
+    """k-means++ (greedy D² farthest-point) initialization."""
+    n = x.shape[0]
+    first = jax.random.randint(key, (), 0, n)
+    cent0 = x[first]
+
+    def pick(carry, key_i):
+        cents, i = carry
+        _, d2 = kops.kmeans_assign(x, cents)
+        nxt = jnp.argmax(d2)  # greedy farthest point (deterministic)
+        cents = jax.lax.dynamic_update_slice(cents, x[nxt][None], (i, 0))
+        return (cents, i + 1), None
+
+    cents = jnp.tile(cent0[None], (k, 1))
+    (cents, _), _ = jax.lax.scan(pick, (cents, 1), jnp.arange(k - 1))
+    return cents
+
+
+def kmeans(x: jnp.ndarray, k: int, key, iters: int = 10):
+    """k-means with k-means++ init. Returns (assign, centroids, d2)."""
+    cent = _kmeanspp_init(x, k, key)
+
+    def step(cent, _):
+        assign, _ = kops.kmeans_assign(x, cent)
+        one = jax.nn.one_hot(assign, k, dtype=x.dtype)  # (N, K)
+        tot = jnp.einsum("nk,nd->kd", one, x)
+        cnt = jnp.sum(one, 0)[:, None]
+        new = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    assign, d2 = kops.kmeans_assign(x, cent)
+    return assign, cent, d2
+
+
+def dedup(tiles: jnp.ndarray, k: int, key, iters: int = 10) -> DedupResult:
+    """Full dedup pass: featurize -> cluster -> pick representatives."""
+    f = features(tiles)
+    assign, cent, d2 = kmeans(f, k, key, iters)
+    n = f.shape[0]
+    # representative = argmin distance within each cluster
+    big = jnp.float32(1e30)
+    per_cluster = jnp.full((k,), big).at[assign].min(d2)
+    is_min = d2 <= per_cluster[assign] + 0.0
+    # break ties: lowest index wins
+    idx = jnp.arange(n)
+    cand = jnp.where(is_min, idx, n)
+    rep_idx = jnp.full((k,), n, jnp.int32).at[assign].min(
+        jnp.where(is_min, idx, n).astype(jnp.int32))
+    rep_mask = jnp.zeros((n,), bool).at[jnp.clip(rep_idx, 0, n - 1)].set(rep_idx < n)
+    sizes = jnp.zeros((k,), jnp.int32).at[assign].add(1)
+    return DedupResult(assign, cent, rep_mask, sizes, jnp.clip(rep_idx, 0, n - 1))
+
+
+def expanded_counts(rep_counts: jnp.ndarray, res: DedupResult) -> jnp.ndarray:
+    """Counts measured on representatives only -> per-tile estimated counts
+    (each tile inherits its cluster representative's count)."""
+    return rep_counts[res.rep_idx][res.assign]

@@ -1,0 +1,96 @@
+"""Energy budget model (paper §III-A-1), calibrated to published numbers.
+
+Real-world anchors from the paper / Baoyun satellite:
+  - daily solar harvest <= 260 KJ; ~150 KJ allocable to computing
+  - compute ~50% of in-operation energy; E_com + E_down > 60% of total
+  - COTS tiers: Raspberry Pi 4B (6 W) and Atlas 200 DK (13 W);
+    RPi processes ~2x more tiles per joule (Fig. 8: '~50% energy saved')
+  - measured downlink 30-50 Mbps; contact window <= ~6 min
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    power_w: float
+    effective_gflops: float  # sustained DNN throughput
+
+    @property
+    def joules_per_gflop(self) -> float:
+        return self.power_w / self.effective_gflops
+
+
+# Calibrated so RPI4 ~ 0.83 GFLOPS/W vs Atlas ~ 0.42 GFLOPS/W (the paper's
+# observed ~2x J/tile gap), with absolute rates in the RPi4-for-CNN range.
+RPI4 = DeviceProfile("rpi4", power_w=6.0, effective_gflops=5.0)
+ATLAS = DeviceProfile("atlas", power_w=13.0, effective_gflops=5.4)
+PROFILES = {p.name: p for p in (RPI4, ATLAS)}
+
+DAILY_HARVEST_J = 260_000.0
+DEFAULT_COMPUTE_BUDGET_J = 150_000.0
+RADIO_POWER_W = 8.0
+
+
+@dataclass
+class EnergyLedger:
+    """Tracks the four activity classes of §III-A-1."""
+
+    budget_j: float
+    e_cap: float = 0.0
+    e_com: float = 0.0
+    e_agg: float = 0.0
+    e_down: float = 0.0
+
+    @property
+    def spent(self) -> float:
+        return self.e_cap + self.e_com + self.e_agg + self.e_down
+
+    @property
+    def remaining(self) -> float:
+        return max(self.budget_j - self.spent, 0.0)
+
+    def charge_capture(self, n_images: int, j_per_image: float = 0.05):
+        self.e_cap += n_images * j_per_image
+
+    def charge_compute(self, n_tiles: int, gflops_per_tile: float,
+                       profile: DeviceProfile):
+        self.e_com += n_tiles * gflops_per_tile * profile.joules_per_gflop
+
+    def charge_aggregate(self, n_ops: int = 1000, j_per_op: float = 1e-6):
+        self.e_agg += n_ops * j_per_op
+
+    def charge_downlink(self, n_bytes: float, bandwidth_mbps: float):
+        seconds = n_bytes * 8.0 / (bandwidth_mbps * 1e6)
+        self.e_down += seconds * RADIO_POWER_W
+
+
+def max_tiles_within_budget(budget_j: float, gflops_per_tile: float,
+                            profile: DeviceProfile) -> int:
+    """How many tiles the onboard counter may process (computational
+    bottleneck: the paper's '22% of observable images' phenomenon)."""
+    if gflops_per_tile <= 0:
+        return 0
+    return int(budget_j / (gflops_per_tile * profile.joules_per_gflop))
+
+
+def detector_gflops(cfg, tile_px: int = None) -> float:
+    """Rough fwd FLOPs of a detector counter on one tile (GFLOP).
+
+    Conv stages at stride-2: sum over stages of H*W*K*K*Cin*Cout*2.
+    """
+    px = tile_px or cfg.input_size
+    total = 0.0
+    h = px
+    c_in = 3
+    total += h * h * 9 * c_in * cfg.widths[0] * 2
+    c_in = cfg.widths[0]
+    for w in cfg.widths[1:]:
+        h = h // 2
+        total += h * h * 9 * c_in * w * 2
+        total += (cfg.n_blocks_per_stage - 1) * h * h * 9 * w * w * 2
+        c_in = w
+    total += h * h * c_in * cfg.n_anchors * (5 + cfg.n_classes) * 2
+    return total / 1e9

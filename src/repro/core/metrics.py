@@ -1,0 +1,57 @@
+"""Counting metrics: CMAE (the paper's headline metric) + a simplified
+mAP@0.5 used by the tile-size study (Fig. 4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+def cmae(pred_counts, true_counts) -> float:
+    """Count Mean Absolute Error: sum|y_i - g_i| / sum g_i (paper §IV-A6)."""
+    y = np.asarray(pred_counts, dtype=np.float64)
+    g = np.asarray(true_counts, dtype=np.float64)
+    denom = max(g.sum(), 1e-9)
+    return float(np.abs(y - g).sum() / denom)
+
+
+def ap50(pred_boxes, pred_scores, gt_boxes, iou_thresh: float = 0.5) -> float:
+    """Average precision at IoU 0.5 for one class over a list of images.
+
+    pred_boxes: list of (Ni,4); pred_scores: list of (Ni,); gt_boxes: list
+    of (Mi,4). Greedy score-ordered matching, 101-point interpolation.
+    """
+    rows = []  # (score, is_tp)
+    n_gt = 0
+    for pb, ps, gb in zip(pred_boxes, pred_scores, gt_boxes):
+        pb, ps, gb = np.asarray(pb), np.asarray(ps), np.asarray(gb)
+        n_gt += len(gb)
+        if len(pb) == 0:
+            continue
+        order = np.argsort(-ps)
+        pb, ps = pb[order], ps[order]
+        matched = np.zeros(len(gb), bool)
+        if len(gb):
+            iou = np.asarray(kops.iou_matrix(pb, gb))
+        for i in range(len(pb)):
+            tp = False
+            if len(gb):
+                j = int(np.argmax(iou[i] * ~matched))
+                if iou[i, j] >= iou_thresh and not matched[j]:
+                    matched[j] = True
+                    tp = True
+            rows.append((ps[i], tp))
+    if not rows or n_gt == 0:
+        return 0.0
+    rows.sort(key=lambda r: -r[0])
+    tps = np.array([r[1] for r in rows], dtype=np.float64)
+    cum_tp = np.cumsum(tps)
+    precision = cum_tp / (np.arange(len(rows)) + 1)
+    recall = cum_tp / n_gt
+    # 101-point interpolated AP
+    ap = 0.0
+    for r in np.linspace(0, 1, 101):
+        p = precision[recall >= r]
+        ap += (p.max() if len(p) else 0.0) / 101
+    return float(ap)

@@ -1,0 +1,71 @@
+"""Adaptive image tiling (paper §III-B, Algorithm 1).
+
+Large EO frames are cut into tiles and resized to the DNN counter's
+input size. Tile size trades mAP against per-frame execution overhead
+(more tiles = more forward passes); Algorithm 1 ternary-searches the
+interior optimum of the (unimodal) accuracy curve.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tile_image(img: jnp.ndarray, tile_size: int) -> jnp.ndarray:
+    """img (H, W, C) -> (N, tile_size, tile_size, C); pads to a multiple."""
+    h, w, c = img.shape
+    ph, pw = -h % tile_size, -w % tile_size
+    img = jnp.pad(img, ((0, ph), (0, pw), (0, 0)))
+    gh, gw = (h + ph) // tile_size, (w + pw) // tile_size
+    t = img.reshape(gh, tile_size, gw, tile_size, c).transpose(0, 2, 1, 3, 4)
+    return t.reshape(gh * gw, tile_size, tile_size, c)
+
+
+def untile_counts(counts: jnp.ndarray, img_hw: Tuple[int, int], tile_size: int):
+    """Aggregate per-tile counts back to a per-frame total."""
+    return jnp.sum(counts)
+
+
+def resize_tiles(tiles: jnp.ndarray, out_size: int) -> jnp.ndarray:
+    """(N, S, S, C) -> (N, out_size, out_size, C), bilinear."""
+    n, _, _, c = tiles.shape
+    return jax.image.resize(tiles.astype(jnp.float32),
+                            (n, out_size, out_size, c), "bilinear")
+
+
+def n_tiles(img_hw: Tuple[int, int], tile_size: int) -> int:
+    h, w = img_hw
+    return ((h + tile_size - 1) // tile_size) * ((w + tile_size - 1) // tile_size)
+
+
+def optimal_tile_size(map_fn: Callable[[int], float], s_min: int, s_max: int,
+                      eps: int = 32) -> Tuple[int, Dict[int, float]]:
+    """Algorithm 1: ternary search for the mAP-optimal tile size.
+
+    ``map_fn(size) -> mAP``. Returns (s_best, evaluated sizes cache).
+
+    The paper's listing narrows [s_left, s_right] by thirds, comparing
+    mAP at the one-third points, until the interval is below ``eps``;
+    the midpoint of the final interval is returned.
+    """
+    cache: Dict[int, float] = {}
+
+    def f(s: int) -> float:
+        s = int(s)
+        if s not in cache:
+            cache[s] = float(map_fn(s))
+        return cache[s]
+
+    s_left, s_right = s_min, s_max
+    while s_right - s_left > eps:
+        s_midl = s_left + (s_right - s_left) / 3.0
+        s_midr = s_right - (s_right - s_left) / 3.0
+        if f(int(s_midl)) < f(int(s_midr)):
+            s_left = s_midl
+        else:
+            s_right = s_midr
+    s_best = int((s_left + s_right) / 2)
+    f(s_best)
+    return s_best, cache

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (+ ref oracles and dispatching ops)."""

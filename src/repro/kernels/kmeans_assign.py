@@ -1,0 +1,56 @@
+"""Fused k-means assignment Pallas kernel (dedup hot loop, paper §III-C).
+
+One grid step loads a (BN, D) block of tile-features plus the full
+(K, D) centroid table into VMEM, computes all pairwise squared
+distances with one MXU matmul (-2 x·cᵀ) plus rank-1 norms, and fuses the
+argmin — assignments never round-trip distances through HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 256
+
+
+def _kernel(x_ref, c_ref, assign_ref, dist_ref):
+    x = x_ref[...].astype(jnp.float32)  # (BN, D)
+    c = c_ref[...].astype(jnp.float32)  # (K, D)
+    x2 = jnp.sum(x * x, -1, keepdims=True)
+    c2 = jnp.sum(c * c, -1)[None, :]
+    d2 = x2 - 2.0 * jax.lax.dot_general(x, c, (((1,), (1,)), ((), ()))) + c2
+    assign_ref[...] = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    dist_ref[...] = jnp.maximum(jnp.min(d2, axis=-1), 0.0)
+
+
+def kmeans_assign(x, centroids, *, bn: int = DEFAULT_BN, interpret: bool = False):
+    """x: (N, D), centroids: (K, D) -> ((N,) int32 assignment, (N,) f32 d²).
+
+    N is padded to a multiple of bn internally.
+    """
+    n, d = x.shape
+    k = centroids.shape[0]
+    n_pad = -n % bn
+    xp = jnp.pad(x, ((0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // bn,)
+    assign, dist = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, centroids)
+    return assign[:n], dist[:n]

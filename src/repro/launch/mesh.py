@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is pure data parallelism across pods (gradient all-reduce
+crosses the inter-pod links only once per step).
+
+Functions, not module constants: importing this module never touches
+jax device state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int = None, model: int = 2):
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    n = n_devices or len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

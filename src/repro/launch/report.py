@@ -1,0 +1,108 @@
+"""Render §Dry-run / §Roofline tables for EXPERIMENTS.md from the
+artifacts emitted by launch.dryrun.
+
+  PYTHONPATH=src python -m repro.launch.report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def load(mesh: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART_DIR, mesh, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    # keep the latest record per (arch, shape)
+    best = {}
+    for r in recs:
+        best[(r["arch"], r["shape"])] = r
+    return [best[k] for k in sorted(best)]
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}M"
+    return f"{b / 1e3:.0f}K"
+
+
+def roofline_table(mesh: str = "single") -> str:
+    """model_flops/useful/fraction are recomputed live from
+    launch.steps.model_flops so estimator fixes apply without
+    re-compiling the artifacts."""
+    from repro.launch.roofline import Roofline
+
+    rows = [
+        "| arch | shape | FLOPs/dev | HBM B/dev | coll B/dev | compute s | "
+        "memory s | coll s | bound | MODEL_FLOPS | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        rl = dict(r["roofline"])
+        try:
+            from repro.launch.steps import model_flops
+            mf = model_flops(r["arch"], r["shape"])
+        except Exception:
+            mf = rl["model_flops"]
+        raw = r.get("cost_raw", {})
+        conv = r.get("convert_artifact", {})
+        ma = r.get("memory_analysis", {})
+        rr = Roofline(flops=raw.get("flops", rl["flops_per_dev"]),
+                      bytes_hbm=raw.get("bytes_accessed", rl["hbm_bytes_per_dev"]),
+                      bytes_coll=rl["coll_bytes_per_dev"],
+                      n_chips=r["n_chips"], model_flops_total=mf,
+                      convert_elems=conv.get("elems", 0.0),
+                      convert_bytes=conv.get("bytes", 0.0),
+                      min_bytes=float(ma.get("argument_bytes", 0)
+                                      + ma.get("output_bytes", 0)))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rr.flops:.2e} | "
+            f"{fmt_bytes(rr.bytes_hbm)} | {fmt_bytes(rr.bytes_coll)} | "
+            f"{rr.compute_s:.3f} | {rr.memory_s:.3f} | "
+            f"{rr.collective_s:.3f} | **{rr.dominant}** | "
+            f"{mf:.2e} | {rr.useful_ratio:.2f} | "
+            f"{rr.roofline_fraction:.3f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | compile s | arg B/dev | temp B/dev | "
+        "ag | ar | rs | a2a | cp |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        m = r["memory_analysis"]
+        c = r["collective_counts"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | "
+            f"{fmt_bytes(m.get('argument_bytes', 0))} | "
+            f"{fmt_bytes(m.get('temp_bytes', 0))} | "
+            f"{c['all-gather']} | {c['all-reduce']} | {c['reduce-scatter']} | "
+            f"{c['all-to-all']} | {c['collective-permute']} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--kind", default="roofline", choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    if args.kind == "roofline":
+        print(roofline_table(args.mesh))
+    else:
+        print(dryrun_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

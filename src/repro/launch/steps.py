@@ -1,0 +1,720 @@
+"""Per-cell step builders: (arch x input-shape) -> a lowered-able plan.
+
+``build_cell(arch, shape_name, mesh)`` returns a CellPlan holding the
+step function, ShapeDtypeStruct input stand-ins (``input_specs()``), and
+in/out shardings — everything ``launch.dryrun`` needs to lower+compile,
+and everything ``launch.train/serve`` need to run for real at reduced
+scale.
+
+No array is ever allocated here: model/optimizer state shapes come from
+``jax.eval_shape`` over the init functions.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as cfgs
+from repro.configs.base import (DetectorConfig, DiffusionConfig, LMConfig,
+                                ShapeSpec, VisionConfig, get_config, get_shape)
+from repro.models import convnext, detector, diffusion, dit, lm, resnet, unet, vit
+from repro.optim.adamw import adamw
+from repro.sharding import policy as pol
+from repro.sharding.rules import param_specs
+from repro.core.throttle import throttle as throttle_fn
+from repro.kernels import ops as kops
+
+
+@dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    fn: Callable                      # positional args match args_sds
+    args_sds: Tuple                   # ShapeDtypeStruct pytrees
+    in_shardings: Tuple               # matching NamedSharding pytrees
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    meta: Dict[str, Any] = field(default_factory=dict)
+    static_argnums: Tuple[int, ...] = ()
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _state_specs(params_sds, cfg, mesh, with_opt=True, zero1_axis=None):
+    """PartitionSpec trees for (params, opt_state). ZeRO-1: optionally
+    shard optimizer moments over `zero1_axis` on their first shardable
+    dim (on top of the param's own TP sharding)."""
+    pspec = param_specs(params_sds, cfg, mesh)
+    if not with_opt:
+        return pspec
+    def moment_spec(ps, leaf):
+        if zero1_axis is None:
+            return ps
+        parts = list(ps)
+        for i, axis in enumerate(parts):
+            if axis is None and leaf.shape[i] % 16 == 0:
+                parts[i] = zero1_axis
+                break
+        return P(*parts)
+    mspec = jax.tree_util.tree_map(
+        moment_spec, pspec,
+        jax.tree_util.tree_map(lambda x: x, params_sds))
+    from repro.optim.adamw import AdamWState
+    opt_spec = AdamWState(step=P(), mu=mspec, nu=mspec)
+    return pspec, opt_spec
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _pure_dp_axes(mesh, batch: int, n_params: int, max_params: float = 1.5e9):
+    """Pure data parallelism for small models: when the global batch
+    divides the whole mesh and the replicated model+optimizer fits HBM,
+    TP buys nothing and costs an all-reduce per layer. Returns the batch
+    axes tuple, or None when pure DP doesn't apply."""
+    if n_params > max_params:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for axes in (("pod", "data", "model"), ("data", "model")):
+        if all(a in sizes for a in axes):
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            if batch % n == 0:
+                return axes
+    return None
+
+
+def _replicated_specs(tree):
+    return jax.tree_util.tree_map(lambda l: P(*([None] * l.ndim)), tree)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_train(arch, cfg: LMConfig, shape: ShapeSpec, mesh, opts):
+    b, s = shape.global_batch, shape.seq_len
+    params_sds = jax.eval_shape(functools.partial(lm.init, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    opt_init, opt_update = adamw(1e-4)
+    opt_sds = jax.eval_shape(opt_init, params_sds)
+    pspec, opt_spec = _state_specs(params_sds, cfg, mesh,
+                                   zero1_axis=opts.get("zero1_axis"))
+    tok_specs = pol.lm_specs(mesh, "train", b, s)
+    accum = opts.get("grad_accum", 1)
+
+    def step(params, opt_state, tokens, labels):
+        if accum > 1:
+            mb_tok = tokens.reshape(accum, b // accum, s)
+            mb_lab = labels.reshape(accum, b // accum, s)
+
+            def micro(carry, xs):
+                g_acc, l_acc = carry
+                t, l = xs
+                (loss, _), g = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+                    params, cfg, t, l)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32) / accum, g_acc, g)
+                return (g_acc, l_acc + loss / accum), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), (mb_tok, mb_lab))
+        else:
+            (loss, _), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+                params, cfg, tokens, labels)
+        params, opt_state, _ = opt_update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    args = (params_sds, opt_sds,
+            jax.ShapeDtypeStruct((b, s), jnp.int32),
+            jax.ShapeDtypeStruct((b, s), jnp.int32))
+    in_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec),
+             _ns(mesh, tok_specs["tokens"]), _ns(mesh, tok_specs["labels"]))
+    out_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), NamedSharding(mesh, P()))
+    return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                    donate_argnums=(0, 1),
+                    meta={"tokens": b * s, "kind": "train"})
+
+
+def _lm_prefill(arch, cfg: LMConfig, shape: ShapeSpec, mesh, opts):
+    b, s = shape.global_batch, shape.seq_len
+    params_sds = jax.eval_shape(functools.partial(lm.init, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    pspec = param_specs(params_sds, cfg, mesh)
+    tok_specs = pol.lm_specs(mesh, "prefill", b, s)
+    cache_spec_one = pol.lm_cache_spec(mesh, cfg, b,
+                                       pol.cache_len_axes(mesh, b, s))
+
+    def step(params, tokens):
+        return lm.prefill(params, cfg, tokens)
+
+    # out: (logits (B,V), caches dict-of-stacks)
+    cache_sds = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, b, s))
+    cache_out_spec = {k: cache_spec_one for k in cache_sds}
+    ba = pol.batch_axes(mesh, b)
+    out_sh = (NamedSharding(mesh, P(ba if ba else None, "model")),
+              _ns(mesh, cache_out_spec))
+    args = (params_sds, jax.ShapeDtypeStruct((b, s), jnp.int32))
+    in_sh = (_ns(mesh, pspec), _ns(mesh, tok_specs["tokens"]))
+    return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                    meta={"tokens": b * s, "kind": "prefill"})
+
+
+def _lm_decode(arch, cfg: LMConfig, shape: ShapeSpec, mesh, opts):
+    b, s = shape.global_batch, shape.seq_len
+    params_sds = jax.eval_shape(functools.partial(lm.init, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    pspec = param_specs(params_sds, cfg, mesh)
+    d = pol.lm_specs(mesh, "decode", b, s)
+    cache_spec_one = pol.lm_cache_spec(mesh, cfg, b,
+                                       pol.cache_len_axes(mesh, b, s))
+    cache_sds = jax.eval_shape(functools.partial(lm.init_cache, cfg, b, s))
+    cache_spec = {k: cache_spec_one for k in cache_sds}
+    absorb = opts.get("mla_absorb", True)
+
+    def step(params, token, caches, pos):
+        return lm.decode_step(params, cfg, token, caches, pos, absorb=absorb)
+
+    ba = pol.batch_axes(mesh, b)
+    args = (params_sds, jax.ShapeDtypeStruct((b, 1), jnp.int32), cache_sds,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (_ns(mesh, pspec), _ns(mesh, d["token"]), _ns(mesh, cache_spec),
+             NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(ba if ba else None, "model")),
+              _ns(mesh, cache_spec))
+    return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                    donate_argnums=(2,),
+                    meta={"tokens": b, "kind": "decode", "cache_len": s})
+
+
+# ---------------------------------------------------------------------------
+# vision cells
+# ---------------------------------------------------------------------------
+
+
+def _vision_fwd_fn(cfg):
+    if cfg.kind == "vit":
+        return vit
+    if cfg.kind == "convnext":
+        return convnext
+    return resnet
+
+
+def _vision_train(arch, cfg: VisionConfig, shape: ShapeSpec, mesh, opts):
+    b, r = shape.global_batch, shape.img_res
+    mod = _vision_fwd_fn(cfg)
+    is_resnet = cfg.kind == "resnet"
+    if is_resnet:
+        params_sds, bn_sds = jax.eval_shape(
+            functools.partial(resnet.init, cfg=cfg), jax.random.PRNGKey(0))
+    else:
+        params_sds = jax.eval_shape(functools.partial(mod.init, cfg=cfg),
+                                    jax.random.PRNGKey(0))
+    opt_init, opt_update = adamw(1e-3)
+    opt_sds = jax.eval_shape(opt_init, params_sds)
+    dp = None if opts.get("no_pure_dp") else _pure_dp_axes(mesh, b, cfg.n_params)
+    if dp is not None:
+        pspec = _replicated_specs(params_sds)
+        from repro.optim.adamw import AdamWState
+        opt_spec = AdamWState(step=P(), mu=pspec, nu=pspec)
+        ba = dp
+        img_spec = P(dp, None, None, None)
+    else:
+        pspec, opt_spec = _state_specs(params_sds, cfg, mesh,
+                                       zero1_axis=opts.get("zero1_axis"))
+        img_spec = pol.image_specs(mesh, b)
+        ba = pol.batch_axes(mesh, b)
+    lab_spec = P(ba if ba else None)
+
+    def ce(logits, labels):
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+    if is_resnet:
+        bn_spec = jax.tree_util.tree_map(lambda _: P(None), bn_sds)
+
+        def step(params, bn_state, opt_state, images, labels):
+            def loss_fn(p):
+                logits, new_bn = resnet.forward(p, bn_state, cfg, images, train=True)
+                return ce(logits, labels), new_bn
+            (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params, opt_state, _ = opt_update(grads, opt_state, params)
+            return params, new_bn, opt_state, loss
+
+        args = (params_sds, bn_sds, opt_sds,
+                jax.ShapeDtypeStruct((b, r, r, 3), jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.int32))
+        in_sh = (_ns(mesh, pspec), _ns(mesh, bn_spec), _ns(mesh, opt_spec),
+                 _ns(mesh, img_spec), _ns(mesh, lab_spec))
+        out_sh = (_ns(mesh, pspec), _ns(mesh, bn_spec), _ns(mesh, opt_spec),
+                  NamedSharding(mesh, P()))
+        return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                        donate_argnums=(0, 1, 2),
+                        meta={"images": b, "kind": "train"})
+
+    def step(params, opt_state, images, labels):
+        def loss_fn(p):
+            logits = mod.forward(p, cfg, images, train=True)
+            return ce(logits, labels)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = opt_update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    args = (params_sds, opt_sds,
+            jax.ShapeDtypeStruct((b, r, r, 3), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32))
+    in_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), _ns(mesh, img_spec),
+             _ns(mesh, lab_spec))
+    out_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), NamedSharding(mesh, P()))
+    return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                    donate_argnums=(0, 1), meta={"images": b, "kind": "train"})
+
+
+def _vision_serve(arch, cfg: VisionConfig, shape: ShapeSpec, mesh, opts):
+    b, r = shape.global_batch, shape.img_res
+    mod = _vision_fwd_fn(cfg)
+    is_resnet = cfg.kind == "resnet"
+    if is_resnet:
+        params_sds, bn_sds = jax.eval_shape(
+            functools.partial(resnet.init, cfg=cfg), jax.random.PRNGKey(0))
+    else:
+        params_sds = jax.eval_shape(functools.partial(mod.init, cfg=cfg),
+                                    jax.random.PRNGKey(0))
+    pspec = param_specs(params_sds, cfg, mesh)
+    img_spec = pol.image_specs(mesh, b)
+    ba = pol.batch_axes(mesh, b)
+
+    if is_resnet:
+        bn_spec = jax.tree_util.tree_map(lambda _: P(None), bn_sds)
+
+        def step(params, bn_state, images):
+            logits, _ = resnet.forward(params, bn_state, cfg, images, train=False)
+            return logits
+
+        args = (params_sds, bn_sds,
+                jax.ShapeDtypeStruct((b, r, r, 3), jnp.float32))
+        in_sh = (_ns(mesh, pspec), _ns(mesh, bn_spec), _ns(mesh, img_spec))
+    else:
+        def step(params, images):
+            return mod.forward(params, cfg, images, train=False)
+
+        args = (params_sds, jax.ShapeDtypeStruct((b, r, r, 3), jnp.float32))
+        in_sh = (_ns(mesh, pspec), _ns(mesh, img_spec))
+    out_sh = NamedSharding(mesh, P(ba if ba else None, None))
+    return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                    meta={"images": b, "kind": "serve"})
+
+
+# ---------------------------------------------------------------------------
+# diffusion cells
+# ---------------------------------------------------------------------------
+
+
+def _diff_train(arch, cfg: DiffusionConfig, shape: ShapeSpec, mesh, opts):
+    b = shape.global_batch
+    lr = shape.img_res // cfg.latent_factor
+    is_dit = cfg.kind == "dit"
+    mod = dit if is_dit else unet
+    params_sds = jax.eval_shape(functools.partial(mod.init, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    opt_init, opt_update = adamw(1e-4)
+    opt_sds = jax.eval_shape(opt_init, params_sds)
+    dp = None if opts.get("no_pure_dp") else _pure_dp_axes(mesh, b, cfg.n_params)
+    if dp is not None:
+        pspec = _replicated_specs(params_sds)
+        from repro.optim.adamw import AdamWState
+        opt_spec = AdamWState(step=P(), mu=pspec, nu=pspec)
+        ba = dp
+        lat_spec = P(dp, None, None, None)
+    else:
+        pspec, opt_spec = _state_specs(params_sds, cfg, mesh,
+                                       zero1_axis=opts.get("zero1_axis"))
+        lat_spec = pol.image_specs(mesh, b)
+        ba = pol.batch_axes(mesh, b)
+    bspec = ba if ba else None
+
+    if is_dit:
+        def step(params, opt_state, latents, y, key):
+            def loss_fn(p):
+                def eps_fn(x, t):
+                    return mod.forward(p, cfg, x, t, y, train=True)[0]
+                return diffusion.train_loss(eps_fn, latents, key)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, _ = opt_update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        args = (params_sds, opt_sds,
+                jax.ShapeDtypeStruct((b, lr, lr, cfg.latent_ch), jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        in_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), _ns(mesh, lat_spec),
+                 _ns(mesh, P(bspec)), NamedSharding(mesh, P(None)))
+    else:
+        def step(params, opt_state, latents, ctx, key):
+            def loss_fn(p):
+                def eps_fn(x, t):
+                    return mod.forward(p, cfg, x, t, ctx, train=True)
+                return diffusion.train_loss(eps_fn, latents, key)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, _ = opt_update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        args = (params_sds, opt_sds,
+                jax.ShapeDtypeStruct((b, lr, lr, cfg.latent_ch), jnp.float32),
+                jax.ShapeDtypeStruct((b, cfg.ctx_len, cfg.ctx_dim), jnp.float32),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        in_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), _ns(mesh, lat_spec),
+                 _ns(mesh, P(bspec, None, None)), NamedSharding(mesh, P(None)))
+    out_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), NamedSharding(mesh, P()))
+    return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                    donate_argnums=(0, 1),
+                    meta={"images": b, "kind": "train", "steps": shape.steps})
+
+
+def _diff_gen(arch, cfg: DiffusionConfig, shape: ShapeSpec, mesh, opts):
+    b = shape.global_batch
+    lr = shape.img_res // cfg.latent_factor
+    is_dit = cfg.kind == "dit"
+    mod = dit if is_dit else unet
+    params_sds = jax.eval_shape(functools.partial(mod.init, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    pspec = param_specs(params_sds, cfg, mesh)
+    lat_spec = pol.image_specs(mesh, b)
+    ba = pol.batch_axes(mesh, b)
+    bspec = ba if ba else None
+
+    if is_dit:
+        def step(params, latents, y, t_cur, t_prev):
+            def eps_fn(x, t):
+                return mod.forward(params, cfg, x, t, y, train=False)[0]
+            return diffusion.ddim_step(eps_fn, latents, t_cur, t_prev)
+
+        args = (params_sds,
+                jax.ShapeDtypeStruct((b, lr, lr, cfg.latent_ch), jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (_ns(mesh, pspec), _ns(mesh, lat_spec), _ns(mesh, P(bspec)),
+                 NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    else:
+        def step(params, latents, ctx, t_cur, t_prev):
+            def eps_fn(x, t):
+                return mod.forward(params, cfg, x, t, ctx, train=False)
+            return diffusion.ddim_step(eps_fn, latents, t_cur, t_prev)
+
+        args = (params_sds,
+                jax.ShapeDtypeStruct((b, lr, lr, cfg.latent_ch), jnp.float32),
+                jax.ShapeDtypeStruct((b, cfg.ctx_len, cfg.ctx_dim), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (_ns(mesh, pspec), _ns(mesh, lat_spec),
+                 _ns(mesh, P(bspec, None, None)),
+                 NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    out_sh = _ns(mesh, lat_spec)
+    return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                    donate_argnums=(1,),
+                    meta={"images": b, "kind": "gen", "steps": shape.steps})
+
+
+# ---------------------------------------------------------------------------
+# the paper's own arch: TargetFuse onboard serving cell
+# ---------------------------------------------------------------------------
+
+
+def _targetfuse_serve(arch, cfg: DetectorConfig, shape: ShapeSpec, mesh, opts):
+    b, r = shape.global_batch, shape.img_res
+    params_sds = jax.eval_shape(functools.partial(detector.init, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    # The counter is tiny (~5M params): channel-sharding it over "model"
+    # buys nothing and costs an all-reduce per conv. When the tile batch
+    # divides the whole (non-pod) mesh, run pure DP: batch over
+    # ("data","model"), weights replicated, zero per-layer collectives.
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in ("data", "model") if a in sizes)
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= sizes[a]
+    pure_dp = opts.get("dp_serve", True) and b % n_dp == 0
+    if pure_dp:
+        pspec = jax.tree_util.tree_map(
+            lambda l: P(*([None] * l.ndim)), params_sds)
+        ba = dp_axes
+    else:
+        pspec = param_specs(params_sds, cfg, mesh)
+        ba = pol.batch_axes(mesh, b)
+    img_spec = P(ba if ba else None, None, None, None)
+    bspec = ba if ba else None
+    n_clusters = 64
+
+    def step(params, tiles, centroids):
+        """The full onboard pipeline of Fig. 3 as one XLA program."""
+        raw = detector.forward(params, cfg, tiles)
+        counts, conf = detector.count_and_confidence(raw, cfg, input_size=r)
+        feats = kops.tile_moments(tiles)
+        assign, d2 = kops.kmeans_assign(feats, centroids)
+        sizes = jnp.full((b,), float(r * r * 3))
+        tr = throttle_fn(conf, sizes, jnp.float32(b * r * r * 3 * 0.15),
+                         0.10, 0.55, "dynamic_conf")
+        c_space = jnp.sum(jnp.where(tr.space, counts, 0.0))
+        return counts, conf, assign, tr.downlink, c_space
+
+    args = (params_sds,
+            jax.ShapeDtypeStruct((b, r, r, 3), jnp.float32),
+            jax.ShapeDtypeStruct((n_clusters, 9), jnp.float32))
+    in_sh = (_ns(mesh, pspec), NamedSharding(mesh, img_spec),
+             NamedSharding(mesh, P(None, None)))
+    out_sh = (NamedSharding(mesh, P(bspec)), NamedSharding(mesh, P(bspec)),
+              NamedSharding(mesh, P(bspec)), NamedSharding(mesh, P(bspec)),
+              NamedSharding(mesh, P()))
+    return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                    meta={"tiles": b, "kind": "serve"})
+
+
+def _detector_train(arch, cfg: DetectorConfig, shape: ShapeSpec, mesh, opts):
+    b, r = shape.global_batch, shape.img_res
+    params_sds = jax.eval_shape(functools.partial(detector.init, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    opt_init, opt_update = adamw(1e-3)
+    opt_sds = jax.eval_shape(opt_init, params_sds)
+    pspec = param_specs(params_sds, cfg, mesh)
+    opt_spec = jax.eval_shape(opt_init, params_sds)  # shapes only
+    from repro.optim.adamw import AdamWState
+    opt_spec = AdamWState(step=P(), mu=pspec, nu=pspec)
+    img_spec = pol.image_specs(mesh, b)
+    ba = pol.batch_axes(mesh, b)
+    g = detector.grid_size(cfg, r)
+
+    def step(params, opt_state, images, targets):
+        (loss, _), grads = jax.value_and_grad(detector.loss_fn, has_aux=True)(
+            params, cfg, images, targets)
+        params, opt_state, _ = opt_update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    args = (params_sds, opt_sds,
+            jax.ShapeDtypeStruct((b, r, r, 3), jnp.float32),
+            jax.ShapeDtypeStruct((b, g, g, cfg.n_anchors, 5 + cfg.n_classes),
+                                 jnp.float32))
+    in_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), _ns(mesh, img_spec),
+             _ns(mesh, P(ba if ba else None, None, None, None, None)))
+    out_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), NamedSharding(mesh, P()))
+    return CellPlan(arch, shape.name, step, args, in_sh, out_sh,
+                    donate_argnums=(0, 1), meta={"tiles": b, "kind": "train"})
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, mesh, **opts) -> CellPlan:
+    cfg = get_config(arch)
+    if opts.get("unroll"):
+        import dataclasses
+        if hasattr(cfg, "scan_layers"):
+            cfg = dataclasses.replace(cfg, scan_layers=False)
+    if opts.get("remat") and hasattr(cfg, "remat"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=opts["remat"])
+    shape = get_shape(arch, shape_name)
+    fam = cfg.family
+    if fam == "lm":
+        if shape.kind == "train":
+            return _lm_train(arch, cfg, shape, mesh, opts)
+        if shape.kind == "prefill":
+            return _lm_prefill(arch, cfg, shape, mesh, opts)
+        return _lm_decode(arch, cfg, shape, mesh, opts)
+    if fam == "vision":
+        if shape.kind in ("cls",):
+            return _vision_train(arch, cfg, shape, mesh, opts)
+        return _vision_serve(arch, cfg, shape, mesh, opts)
+    if fam == "diffusion":
+        if shape.kind == "train":
+            return _diff_train(arch, cfg, shape, mesh, opts)
+        return _diff_gen(arch, cfg, shape, mesh, opts)
+    if fam == "detector":
+        if shape.kind == "train":
+            return _detector_train(arch, cfg, shape, mesh, opts)
+        return _targetfuse_serve(arch, cfg, shape, mesh, opts)
+    raise KeyError(fam)
+
+
+def input_specs(arch: str, shape_name: str, mesh=None) -> Tuple:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step
+    (the deliverable's ``input_specs()``). No device allocation."""
+    if mesh is None:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    return build_cell(arch, shape_name, mesh).args_sds
+
+
+def _vit_fwd_flops(cfg, img_res: int) -> float:
+    """Exact matmul FLOPs of one ViT forward image."""
+    t = (img_res // cfg.patch) ** 2 + 1
+    d, f = cfg.d_model, cfg.d_ff
+    patch = 2.0 * (img_res // cfg.patch) ** 2 * cfg.patch ** 2 * 3 * d
+    blk = 2.0 * t * (4 * d * d + 2 * d * f) + 4.0 * t * t * d
+    head = 2.0 * d * cfg.n_classes
+    return patch + cfg.n_layers * blk + head
+
+
+def _convnext_fwd_flops(cfg, img_res: int) -> float:
+    r = img_res // 4
+    total = 2.0 * r * r * 4 * 4 * 3 * cfg.dims[0]
+    for i, (dep, dim) in enumerate(zip(cfg.depths, cfg.dims)):
+        hw = r * r
+        blk = 2.0 * hw * (49 * dim + 8 * dim * dim)
+        total += dep * blk
+        if i + 1 < len(cfg.dims):
+            total += 2.0 * (r // 2) ** 2 * 4 * dim * cfg.dims[i + 1]
+            r //= 2
+    return total + 2.0 * cfg.dims[-1] * cfg.n_classes
+
+
+def _resnet_fwd_flops(cfg, img_res: int) -> float:
+    w = cfg.width
+    r = img_res // 2
+    total = 2.0 * r * r * 49 * 3 * w
+    r //= 2  # maxpool
+    c_in = w
+    for i, dep in enumerate(cfg.depths):
+        mid = w * (2 ** i)
+        out = mid * 4
+        if i > 0:
+            r //= 2
+        for b in range(dep):
+            total += 2.0 * r * r * (c_in * mid + 9 * mid * mid + mid * out)
+            if b == 0:
+                total += 2.0 * r * r * c_in * out  # projection
+            c_in = out
+    return total + 2.0 * c_in * cfg.n_classes
+
+
+def _dit_fwd_flops(cfg, img_res: int) -> float:
+    lr = img_res // cfg.latent_factor
+    t = (lr // cfg.patch) ** 2
+    d = cfg.d_model
+    # adaLN conditioning is per-image (B, 6d), not per-token
+    blk = 2.0 * t * (4 * d * d + 8 * d * d) + 4.0 * t * t * d + 2.0 * 6 * d * d
+    io = 2.0 * t * (cfg.patch ** 2 * cfg.latent_ch * d * 3)
+    return cfg.n_layers * blk + io
+
+
+def _unet_fwd_flops(cfg, img_res: int) -> float:
+    """Walks the same structure as models.unet (down+mid+up)."""
+    lr = img_res // cfg.latent_factor
+    ch = cfg.ch
+    chans = [ch * m for m in cfg.ch_mult]
+
+    def res_block(hw, cin, cout):
+        f = 2.0 * hw * 9 * (cin * cout + cout * cout) + 2.0 * hw * 4 * ch * cout
+        if cin != cout:
+            f += 2.0 * hw * cin * cout
+        return f
+
+    def attn_block(hw, c):
+        heads_proj = 2.0 * hw * c * c * (3 + 1 + 1 + 1 + 2)  # qkv,o,proj_in/out... approx
+        sa = 4.0 * hw * hw * c
+        ca = 4.0 * hw * cfg.ctx_len * c + 2.0 * cfg.ctx_len * cfg.ctx_dim * c * 2
+        ff = 2.0 * hw * (8 * c * c + 4 * c * c)
+        return heads_proj + sa + ca + ff
+
+    total = 2.0 * lr * lr * 9 * cfg.latent_ch * ch
+    r = lr
+    prev = ch
+    # down
+    for lvl, c in enumerate(chans):
+        hw = r * r
+        for _ in range(cfg.n_res_blocks):
+            total += res_block(hw, prev, c)
+            if lvl in cfg.attn_levels:
+                total += attn_block(hw, c)
+            prev = c
+        if lvl + 1 < len(chans):
+            r //= 2
+            total += 2.0 * r * r * 9 * c * c
+    # mid
+    hw = r * r
+    total += 2 * res_block(hw, chans[-1], chans[-1]) + attn_block(hw, chans[-1])
+    # up (skip concats raise cin)
+    for lvl in reversed(range(len(chans))):
+        c = chans[lvl]
+        hw = r * r
+        for _ in range(cfg.n_res_blocks + 1):
+            total += res_block(hw, c + prev, c)
+            if lvl in cfg.attn_levels:
+                total += attn_block(hw, c)
+            prev = c
+        if lvl > 0:
+            r *= 2
+            total += 2.0 * r * r * 9 * c * c
+    return total + 2.0 * lr * lr * 9 * ch * cfg.latent_ch
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS (useful work) for the roofline ratio.
+
+    Exact matmul/conv accounting per family; train = 3x forward
+    (remat recompute is implementation overhead and excluded — that is
+    the point of the useful_ratio metric). MoE prices active params
+    only; causal attention counts the used (lower-triangle) half.
+    """
+    cfg = get_config(arch)
+    shape = get_shape(arch, shape_name)
+    if cfg.family == "lm":
+        b, s = shape.global_batch, shape.seq_len
+        n_active = cfg.n_active_params
+        if cfg.mla is None:
+            qk_dim = v_dim = cfg.head_dim
+        else:
+            qk_dim = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+            v_dim = cfg.mla.v_head_dim
+        h = cfg.n_heads
+        if shape.kind in ("train", "prefill"):
+            base = 2.0 * n_active * b * s
+            # causal: half the S^2 pairs are useful
+            attn_fwd = cfg.n_layers * b * s * s * h * (qk_dim + v_dim)
+            mult = 3.0 if shape.kind == "train" else 1.0
+            return (base + attn_fwd) * mult
+        # decode: one token per sequence against an s-long cache
+        base = 2.0 * n_active * b
+        if cfg.mla is not None:  # absorbed-latent decode scores+combine
+            attn = 2.0 * cfg.n_layers * b * s * h * (
+                cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                + cfg.mla.kv_lora_rank)
+        else:
+            attn = 2.0 * cfg.n_layers * b * s * h * (qk_dim + v_dim)
+        return base + attn
+    if cfg.family == "vision":
+        b, r = shape.global_batch, shape.img_res
+        per = {"vit": _vit_fwd_flops, "convnext": _convnext_fwd_flops,
+               "resnet": _resnet_fwd_flops}[cfg.kind](cfg, r)
+        mult = 3.0 if shape.kind == "cls" else 1.0
+        return per * b * mult
+    if cfg.family == "diffusion":
+        b, r = shape.global_batch, shape.img_res
+        per = (_dit_fwd_flops if cfg.kind == "dit" else _unet_fwd_flops)(cfg, r)
+        mult = 3.0 if shape.kind == "train" else 1.0
+        return per * b * mult
+    # detector
+    b = shape.global_batch
+    from repro.core.energy import detector_gflops
+    per = detector_gflops(cfg, shape.img_res) * 1e9
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return per * b * mult

@@ -1,0 +1,96 @@
+"""ConvNeXt (-B) — 4-stage hierarchy, 7x7 depthwise conv + LN + inverted
+bottleneck MLP blocks, patchify stem, LN-per-downsample.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VisionConfig
+from repro.models import layers as L
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init_block(key, dim, dt):
+    ks = jax.random.split(key, 3)
+    return {
+        "dw": L.conv_init(ks[0], 7, 7, 1, dim, dt),  # depthwise: HWIO with I=1
+        "ln_s": jnp.ones((dim,), dt), "ln_b": jnp.zeros((dim,), dt),
+        "pw1": L.dense_init(ks[1], dim, 4 * dim, dt),
+        "b1": jnp.zeros((4 * dim,), dt),
+        "pw2": L.dense_init(ks[2], 4 * dim, dim, dt),
+        "b2": jnp.zeros((dim,), dt),
+        "gamma": jnp.full((dim,), 1e-6, dt),
+    }
+
+
+def init(key, cfg: VisionConfig):
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 2 + 2 * len(cfg.depths))
+    params = {
+        "stem_w": L.conv_init(ks[0], 4, 4, 3, cfg.dims[0], dt),
+        "stem_b": jnp.zeros((cfg.dims[0],), dt),
+        "stem_ln_s": jnp.ones((cfg.dims[0],), dt),
+        "stem_ln_b": jnp.zeros((cfg.dims[0],), dt),
+        "stages": [],
+        "downs": [],
+    }
+    stages = []
+    downs = []
+    for i, (dep, dim) in enumerate(zip(cfg.depths, cfg.dims)):
+        stages.append(
+            jax.vmap(lambda k, dim=dim: _init_block(k, dim, dt))(
+                jax.random.split(ks[2 + i], dep)
+            )
+        )
+        if i + 1 < len(cfg.dims):
+            kd = jax.random.split(ks[2 + len(cfg.depths) + i], 1)[0]
+            downs.append({
+                "ln_s": jnp.ones((dim,), dt), "ln_b": jnp.zeros((dim,), dt),
+                "w": L.conv_init(kd, 2, 2, dim, cfg.dims[i + 1], dt),
+                "b": jnp.zeros((cfg.dims[i + 1],), dt),
+            })
+    params["stages"] = stages
+    params["downs"] = downs
+    kh = jax.random.split(ks[1], 1)[0]
+    params["head_ln_s"] = jnp.ones((cfg.dims[-1],), dt)
+    params["head_ln_b"] = jnp.zeros((cfg.dims[-1],), dt)
+    params["head"] = L.dense_init(kh, cfg.dims[-1], cfg.n_classes, dt, 0.02)
+    return params
+
+
+def _block(p, x):
+    dim = x.shape[-1]
+    h = L.conv2d(x, p["dw"], groups=dim)
+    h = L.layernorm(h, p["ln_s"], p["ln_b"])
+    h = jnp.einsum("bhwc,cf->bhwf", h, p["pw1"]) + p["b1"]
+    h = jax.nn.gelu(h)
+    h = jnp.einsum("bhwf,fc->bhwc", h, p["pw2"]) + p["b2"]
+    return x + p["gamma"] * h
+
+
+def forward(params, cfg: VisionConfig, images, train: bool = False):
+    x = L.conv2d(images.astype(_dt(cfg)), params["stem_w"], stride=4,
+                 padding="VALID") + params["stem_b"]
+    x = L.layernorm(x, params["stem_ln_s"], params["stem_ln_b"])
+    for i, stage in enumerate(params["stages"]):
+        def body(xb, p):
+            return _block(p, xb), None
+        if cfg.remat != "none" and train:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.dots_saveable)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, stage)
+        else:
+            n = jax.tree_util.tree_leaves(stage)[0].shape[0]
+            for j in range(n):
+                x, _ = body(x, jax.tree_util.tree_map(lambda a: a[j], stage))
+        if i < len(params["downs"]):
+            d = params["downs"][i]
+            x = L.layernorm(x, d["ln_s"], d["ln_b"])
+            x = L.conv2d(x, d["w"], stride=2, padding="VALID") + d["b"]
+    x = jnp.mean(x, axis=(1, 2))
+    x = L.layernorm(x, params["head_ln_s"], params["head_ln_b"])
+    return jnp.einsum("bd,dc->bc", x, params["head"]).astype(jnp.float32)

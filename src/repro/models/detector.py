@@ -1,0 +1,146 @@
+"""Single-shot detector 'counters' (the paper's Table II models).
+
+Grid detector in the YOLO family: stride-2 conv stages + 1x1 head
+emitting (box4, obj1, class C) per cell/anchor. Space tier
+(targetfuse-space ~ YOLOv3-tiny) is shallow; ground tier
+(targetfuse-ground ~ YOLOV3) is deeper and wider — reproducing the
+accuracy asymmetry the cascade exploits.
+
+Counting: decode -> NMS (IoU Pallas kernel) -> count above threshold;
+tile confidence = mean detection score (paper's ``scores.mean()``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DetectorConfig
+from repro.models import layers as L
+from repro.kernels import ops as kops
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init(key, cfg: DetectorConfig):
+    dt = _dt(cfg)
+    ks = iter(jax.random.split(key, 4 * len(cfg.widths) * cfg.n_blocks_per_stage + 4))
+    p = {"stem": L.conv_init(next(ks), 3, 3, 3, cfg.widths[0], dt), "stages": []}
+    prev = cfg.widths[0]
+    for w in cfg.widths[1:]:
+        stage = []
+        stage.append({"w": L.conv_init(next(ks), 3, 3, prev, w, dt),
+                      "b": jnp.zeros((w,), dt)})
+        for _ in range(cfg.n_blocks_per_stage - 1):
+            stage.append({"w": L.conv_init(next(ks), 3, 3, w, w, dt),
+                          "b": jnp.zeros((w,), dt)})
+        p["stages"].append(stage)
+        prev = w
+    p["head_w"] = L.truncated_normal(
+        next(ks), (1, 1, prev, cfg.n_anchors * (5 + cfg.n_classes)), dt, 0.01)
+    p["head_b"] = jnp.zeros((cfg.n_anchors * (5 + cfg.n_classes),), dt)
+    return p
+
+
+def grid_size(cfg: DetectorConfig, input_size=None):
+    return (input_size or cfg.input_size) // (2 ** len(cfg.widths[1:]))
+
+
+def forward(params, cfg: DetectorConfig, images):
+    """images (B, S, S, 3) in [0,1] -> raw head (B, G, G, A, 5+C)."""
+    x = images.astype(_dt(cfg))
+    x = jax.nn.leaky_relu(L.conv2d(x, params["stem"]), 0.1)
+    for stage in params["stages"]:
+        first = True
+        for blk in stage:
+            x = L.conv2d(x, blk["w"], stride=2 if first else 1) + blk["b"]
+            x = jax.nn.leaky_relu(x, 0.1)
+            first = False
+    x = L.conv2d(x, params["head_w"]) + params["head_b"]
+    b, g, _, _ = x.shape
+    return x.reshape(b, g, g, cfg.n_anchors, 5 + cfg.n_classes).astype(jnp.float32)
+
+
+def loss_fn(params, cfg: DetectorConfig, images, targets):
+    """targets (B,G,G,A,5+C): [x,y,w,h (cell units), obj, onehot-class]."""
+    raw = forward(params, cfg, images)
+    obj_t = targets[..., 4]
+    obj_logit = raw[..., 4]
+    bce = (jnp.maximum(obj_logit, 0) - obj_logit * obj_t
+           + jnp.log1p(jnp.exp(-jnp.abs(obj_logit))))
+    # positives are ~1% of cells; upweight them so objectness converges
+    w = jnp.where(obj_t > 0, 16.0, 1.0)
+    obj_loss = jnp.sum(w * bce) / jnp.sum(w)
+    pos = obj_t[..., None]
+    box_loss = jnp.sum(pos * jnp.square(jax.nn.sigmoid(raw[..., :4]) - targets[..., :4]))
+    box_loss = box_loss / jnp.maximum(jnp.sum(obj_t), 1.0)
+    cls_logits = raw[..., 5:]
+    cls_t = targets[..., 5:]
+    logp = jax.nn.log_softmax(cls_logits, axis=-1)
+    cls_loss = -jnp.sum(obj_t * jnp.sum(cls_t * logp, -1)) / jnp.maximum(jnp.sum(obj_t), 1.0)
+    return 2.0 * obj_loss + 5.0 * box_loss + cls_loss, {
+        "obj": obj_loss, "box": box_loss, "cls": cls_loss}
+
+
+def decode(raw, cfg: DetectorConfig, input_size=None):
+    """raw (B,G,G,A,5+C) -> (boxes (B,N,4) xyxy in px, scores (B,N))."""
+    b, g = raw.shape[0], raw.shape[1]
+    s = input_size or cfg.input_size
+    cell = s / g
+    cy = (jnp.arange(g) + 0.5)[None, :, None, None]
+    cx = (jnp.arange(g) + 0.5)[None, None, :, None]
+    box = jax.nn.sigmoid(raw[..., :4])
+    # xy offset within cell [-0.5, 0.5]; wh up to 4 cells
+    bx = (cx + box[..., 0] - 0.5) * cell
+    by = (cy + box[..., 1] - 0.5) * cell
+    bw = box[..., 2] * 4 * cell
+    bh = box[..., 3] * 4 * cell
+    boxes = jnp.stack([bx - bw / 2, by - bh / 2, bx + bw / 2, by + bh / 2], -1)
+    obj = jax.nn.sigmoid(raw[..., 4])
+    cls = jax.nn.softmax(raw[..., 5:], -1).max(-1)
+    scores = obj * cls
+    n = g * g * cfg.n_anchors
+    return boxes.reshape(b, n, 4), scores.reshape(b, n)
+
+
+def nms_keep(boxes, scores, iou_thresh=0.5, score_thresh=0.3, max_det=128):
+    """Greedy NMS for one image: (N,4),(N,) -> keep mask (N,) bool.
+
+    Vectorized greedy suppression over the top-`max_det` candidates using
+    the IoU matrix kernel (paper §IV-A2 'global matrix of bounding box
+    predictions').
+    """
+    n = boxes.shape[0]
+    k = min(max_det, n)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    top_b = boxes[top_i]
+    iou = kops.iou_matrix(top_b, top_b)
+    above = top_s > score_thresh
+
+    def body(i, keep):
+        sup = (iou[i] > iou_thresh) & (jnp.arange(k) > i) & keep[i]
+        return keep & ~sup
+
+    keep = jax.lax.fori_loop(0, k, body, above)
+    mask = jnp.zeros((n,), bool).at[top_i].set(keep)
+    return mask
+
+
+def count_and_confidence(raw, cfg: DetectorConfig, score_thresh=0.3,
+                         iou_thresh=0.5, input_size=None):
+    """Per-tile object count + mean-score confidence after NMS.
+
+    raw (B,G,G,A,5+C) -> (count (B,) f32, conf (B,) f32 in [0,1]).
+    """
+    boxes, scores = decode(raw, cfg, input_size)
+
+    def one(bx, sc):
+        keep = nms_keep(bx, sc, iou_thresh, score_thresh)
+        cnt = jnp.sum(keep.astype(jnp.float32))
+        conf = jnp.sum(sc * keep) / jnp.maximum(cnt, 1.0)
+        return cnt, conf
+
+    return jax.vmap(one)(boxes, scores)

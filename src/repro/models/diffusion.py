@@ -1,0 +1,59 @@
+"""Diffusion substrate shared by DiT and UNet: DDPM cosine schedule,
+eps-prediction training loss, DDIM sampler as a lax.scan (one forward
+per step, matching the assignment's sampler semantics).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+N_TRAIN_STEPS = 1000
+
+
+def alphas_cumprod(n=N_TRAIN_STEPS):
+    t = jnp.arange(n + 1, dtype=jnp.float32) / n
+    f = jnp.cos((t + 0.008) / 1.008 * math.pi / 2) ** 2
+    a = jnp.clip(f / f[0], 1e-5, 1.0)
+    return a[1:]
+
+
+def add_noise(latents, noise, t):
+    """q(x_t | x_0): t int (B,) in [0, N)."""
+    a = alphas_cumprod()[t][:, None, None, None]
+    return jnp.sqrt(a) * latents + jnp.sqrt(1 - a) * noise
+
+
+def train_loss(eps_fn: Callable, latents, key):
+    """eps_fn(x_t, t) -> eps_hat. Returns scalar MSE loss."""
+    b = latents.shape[0]
+    kt, kn = jax.random.split(key)
+    t = jax.random.randint(kt, (b,), 0, N_TRAIN_STEPS)
+    noise = jax.random.normal(kn, latents.shape, jnp.float32)
+    x_t = add_noise(latents.astype(jnp.float32), noise, t)
+    eps = eps_fn(x_t, t)
+    return jnp.mean(jnp.square(eps - noise))
+
+
+def ddim_step(eps_fn: Callable, x, t_cur, t_prev):
+    """One deterministic DDIM update from t_cur to t_prev (ints)."""
+    a = alphas_cumprod()
+    a_cur = a[t_cur]
+    a_prev = jnp.where(t_prev >= 0, a[jnp.maximum(t_prev, 0)], 1.0)
+    eps = eps_fn(x, jnp.full((x.shape[0],), t_cur, jnp.int32))
+    x0 = (x - jnp.sqrt(1 - a_cur) * eps) / jnp.sqrt(a_cur)
+    return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1 - a_prev) * eps
+
+
+def sample(eps_fn: Callable, key, shape, n_steps: int):
+    """Full DDIM sampler: n_steps forwards via lax.scan."""
+    ts = jnp.linspace(N_TRAIN_STEPS - 1, 0, n_steps + 1).astype(jnp.int32)
+    x = jax.random.normal(key, shape, jnp.float32)
+
+    def body(x, i):
+        return ddim_step(eps_fn, x, ts[i], ts[i + 1]), None
+
+    x, _ = jax.lax.scan(body, x, jnp.arange(n_steps))
+    return x

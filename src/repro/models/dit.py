@@ -1,0 +1,131 @@
+"""DiT (Diffusion Transformer, DiT-S/2) — adaLN-Zero conditioning,
+patchified VAE latents (stub VAE: 8x downsample, 4 channels),
+scan-over-layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig
+from repro.models import layers as L
+from repro.kernels import ops as kops
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def latent_res(cfg: DiffusionConfig, img_res=None):
+    return (img_res or cfg.img_res) // cfg.latent_factor
+
+
+def _init_block(key, cfg):
+    d = cfg.d_model
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "wqkv": L.dense_init(ks[0], d, 3 * d, dt),
+        "wo": L.dense_init(ks[1], d, d, dt),
+        "w_in": L.dense_init(ks[2], d, 4 * d, dt),
+        "w_out": L.dense_init(ks[3], 4 * d, d, dt),
+        # adaLN-zero: 6 gates/shifts/scales from conditioning; zero-init
+        "ada_w": jnp.zeros((d, 6 * d), dt),
+        "ada_b": jnp.zeros((6 * d,), dt),
+    }
+
+
+def init(key, cfg: DiffusionConfig):
+    dt = _dt(cfg)
+    d = cfg.d_model
+    c = cfg.latent_ch
+    p = cfg.patch
+    ks = jax.random.split(key, 8)
+    return {
+        "patch_w": L.dense_init(ks[0], c * p * p, d, dt),
+        "patch_b": jnp.zeros((d,), dt),
+        "t_w1": L.dense_init(ks[1], 256, d, dt), "t_b1": jnp.zeros((d,), dt),
+        "t_w2": L.dense_init(ks[2], d, d, dt), "t_b2": jnp.zeros((d,), dt),
+        "y_emb": L.truncated_normal(ks[3], (cfg.n_classes + 1, d), dt, 0.02),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(
+            jax.random.split(ks[4], cfg.n_layers)
+        ),
+        "final_ada_w": jnp.zeros((d, 2 * d), dt),
+        "final_ada_b": jnp.zeros((2 * d,), dt),
+        "final_w": jnp.zeros((d, p * p * c * 2), dt),
+        "final_b": jnp.zeros((p * p * c * 2,), dt),
+    }
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None, :]) + shift[:, None, :]
+
+
+def _block(p, cfg, x, cond):
+    b, s, d = x.shape
+    ada = jnp.einsum("bd,dk->bk", jax.nn.silu(cond), p["ada_w"]) + p["ada_b"]
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
+    h = _modulate(_ln(x), sh1, sc1)
+    qkv = jnp.einsum("bsd,dk->bsk", h, p["wqkv"])
+    q, k, v = jnp.split(qkv.reshape(b, s, 3 * cfg.n_heads, d // cfg.n_heads), 3, axis=2)
+    a = kops.attention(q, k, v, causal=False).reshape(b, s, d)
+    x = x + g1[:, None, :] * jnp.einsum("bsd,dk->bsk", a, p["wo"])
+    h = _modulate(_ln(x), sh2, sc2)
+    h = jnp.einsum("bsd,df->bsf", h, p["w_in"])
+    h = jax.nn.gelu(h)
+    h = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return x + g2[:, None, :] * h
+
+
+def _ln(x):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+
+
+def forward(params, cfg: DiffusionConfig, latents, t, y, train: bool = False):
+    """latents (B, Hl, Wl, C); t (B,) timesteps; y (B,) class ids.
+
+    Returns (eps_pred, sigma_pred) each (B, Hl, Wl, C).
+    """
+    dt = _dt(cfg)
+    b, hl, wl, c = latents.shape
+    p = cfg.patch
+    gh, gw = hl // p, wl // p
+    x = latents.astype(dt).reshape(b, gh, p, gw, p, c).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, gh * gw, p * p * c)
+    x = jnp.einsum("bsk,kd->bsd", x, params["patch_w"]) + params["patch_b"]
+    # 2D sin-cos position embedding (resolution-agnostic -> gen_1024 works)
+    d = cfg.d_model
+    ph = L.sinusoidal_embedding(jnp.arange(gh), d // 2)
+    pw = L.sinusoidal_embedding(jnp.arange(gw), d // 2)
+    pos = jnp.concatenate([
+        jnp.broadcast_to(ph[:, None, :], (gh, gw, d // 2)),
+        jnp.broadcast_to(pw[None, :, :], (gh, gw, d // 2)),
+    ], -1).reshape(1, gh * gw, d)
+    x = x + pos.astype(dt)
+
+    temb = L.sinusoidal_embedding(t, 256).astype(dt)
+    cond = jnp.einsum("bk,kd->bd", temb, params["t_w1"]) + params["t_b1"]
+    cond = jax.nn.silu(cond)
+    cond = jnp.einsum("bd,dk->bk", cond, params["t_w2"]) + params["t_b2"]
+    cond = cond + params["y_emb"][y]
+
+    def body(xb, pb):
+        return _block(pb, cfg, xb, cond), None
+
+    if cfg.remat != "none" and train:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.dots_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = body(x, jax.tree_util.tree_map(lambda a: a[i], params["blocks"]))
+
+    ada = jnp.einsum("bd,dk->bk", jax.nn.silu(cond), params["final_ada_w"]) + params["final_ada_b"]
+    sh, sc = jnp.split(ada, 2, axis=-1)
+    x = _modulate(_ln(x), sh, sc)
+    x = jnp.einsum("bsd,dk->bsk", x, params["final_w"]) + params["final_b"]
+    x = x.reshape(b, gh, gw, p, p, 2 * c).transpose(0, 1, 3, 2, 4, 5).reshape(b, hl, wl, 2 * c)
+    return x[..., :c].astype(jnp.float32), x[..., c:].astype(jnp.float32)

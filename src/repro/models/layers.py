@@ -1,0 +1,144 @@
+"""Shared neural-net primitives (pure JAX, no flax).
+
+Conventions:
+- params are nested dicts of jnp arrays; ``init_*`` builds them, the
+  matching ``apply``-style fns are pure.
+- scan-over-layers models stack per-layer params on a leading axis.
+- all matmuls go through einsum so sharding propagation stays clean.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, dtype, stddev):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, stddev=None):
+    stddev = stddev if stddev is not None else 1.0 / math.sqrt(d_in)
+    return truncated_normal(key, (d_in, d_out), dtype, stddev)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def groupnorm(x, scale, bias, groups=32, eps=1e-5):
+    """GroupNorm over the channel (last) axis of NHWC tensors."""
+    dt = x.dtype
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(b, h, w, c)
+    return (xf * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D). positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    h = h * jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in) + b_in)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+# ---------------------------------------------------------------------------
+# Embedding helpers
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_embedding(t, dim, max_period=10000.0):
+    """t: (B,) float/int -> (B, dim) classic transformer/diffusion timestep emb."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Conv helpers (NHWC)
+# ---------------------------------------------------------------------------
+
+
+def conv_init(key, kh, kw, c_in, c_out, dtype):
+    stddev = 1.0 / math.sqrt(kh * kw * c_in)
+    return truncated_normal(key, (kh, kw, c_in, c_out), dtype, stddev)
+
+
+def conv2d(x, w, stride=1, padding="SAME", groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def batchnorm_train(x, scale, bias, eps=1e-5):
+    """Returns (y, batch_mean, batch_var) — caller maintains running stats."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=(0, 1, 2))
+    var = jnp.var(xf, axis=(0, 1, 2))
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype), mu, var
+
+
+def batchnorm_eval(x, scale, bias, mean, var, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)

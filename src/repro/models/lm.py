@@ -1,0 +1,387 @@
+"""Decoder-only LM trunk covering all four assigned LM archs.
+
+Features: RoPE, GQA (optional qk-norm), SwiGLU dense FFN, MoE FFN
+(shared + routed top-k, group-wise capacity dispatch), MLA attention
+with compressed KV cache (naive and absorbed decode paths),
+scan-over-layers with optional remat, KV-cache prefill/decode.
+
+Layer layout: `first_dense_layers` dense-FFN layers (stacked+scanned)
+followed by the remaining layers (MoE if cfg.moe else dense), also
+stacked+scanned — two homogeneous scans max.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_block
+from repro.sharding import ctx
+from repro.kernels import ops as kops
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: LMConfig):
+    dt = _dt(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        p = {
+            "wq": L.dense_init(ks[0], d, cfg.n_heads * qk_head, dt),
+            "w_dkv": L.dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+            "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+            "w_uk": L.dense_init(ks[2], m.kv_lora_rank, cfg.n_heads * m.qk_nope_head_dim, dt),
+            "w_uv": L.dense_init(ks[3], m.kv_lora_rank, cfg.n_heads * m.v_head_dim, dt),
+            "wo": L.dense_init(ks[4], cfg.n_heads * m.v_head_dim, d, dt),
+        }
+        return p
+    p = {
+        "wq": L.dense_init(ks[0], d, cfg.n_heads * cfg.head_dim, dt),
+        "wk": L.dense_init(ks[1], d, cfg.n_kv_heads * cfg.head_dim, dt),
+        "wv": L.dense_init(ks[2], d, cfg.n_kv_heads * cfg.head_dim, dt),
+        "wo": L.dense_init(ks[3], cfg.n_heads * cfg.head_dim, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dt)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dt)
+    return p
+
+
+def _init_dense_ffn(key, cfg: LMConfig):
+    dt = _dt(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": L.dense_init(k1, d, f, dt),
+        "w_up": L.dense_init(k2, d, f, dt),
+        "w_down": L.dense_init(k3, f, d, dt),
+    }
+
+
+def _init_block(key, cfg: LMConfig, use_moe: bool):
+    dt = _dt(cfg)
+    k1, k2 = jax.random.split(key)
+    blk = {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "attn": _init_attn(k1, cfg),
+    }
+    if use_moe:
+        blk["moe"] = init_moe(k2, cfg)
+    else:
+        blk["mlp"] = _init_dense_ffn(k2, cfg)
+    return blk
+
+
+def init(key, cfg: LMConfig):
+    ke, kb, kh = jax.random.split(key, 3)
+    dt = _dt(cfg)
+    params = {
+        "embed": L.truncated_normal(ke, (cfg.vocab_size, cfg.d_model), dt, 0.02),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+    if cfg.moe is None:
+        n_dense, n_moe = cfg.n_layers, 0
+    keys = jax.random.split(kb, cfg.n_layers)
+    if n_dense:
+        params["blocks_dense"] = jax.vmap(lambda k: _init_block(k, cfg, False))(
+            keys[:n_dense]
+        )
+    if n_moe:
+        params["blocks_moe"] = jax.vmap(lambda k: _init_block(k, cfg, True))(
+            keys[n_dense:]
+        )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab_size, dt, 0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+
+def _gqa_attend(p, cfg: LMConfig, x, positions, mode, cache=None, pos=None):
+    """mode: 'train' | 'prefill' | 'decode'. Returns (out, new_cache, aux)."""
+    b, s, d = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"]).reshape(b, s, hk, hd)
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"]).reshape(b, s, hk, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if mode in ("train", "prefill"):
+        # Attention layout: head-parallel when heads divide the model
+        # axis; otherwise sequence-parallel q with K/V replicated over
+        # "model" — without this, XLA contracts over a sharded head_dim
+        # and ALL-REDUCES the full (S, S) logits per layer (TB/device
+        # at 32k for 24-head phi4).
+        msize = ctx.axis_size("model")
+        batch_ax = ("pod", "data")
+        if msize and h % msize == 0 and hk % msize == 0:
+            q = ctx.constrain(q, batch_ax, None, "model", None)
+            k = ctx.constrain(k, batch_ax, None, "model", None)
+            v = ctx.constrain(v, batch_ax, None, "model", None)
+        elif msize:
+            q = ctx.constrain(q, batch_ax, "model", None, None)
+            k = ctx.constrain(k, batch_ax, None, None, None)
+            v = ctx.constrain(v, batch_ax, None, None, None)
+        o = kops.attention(q, k, v, causal=True)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    else:  # decode: s == 1, cache holds full-length k/v
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        kv_len = jnp.full((b,), pos + 1, jnp.int32)
+        o = kops.decode_attention(q, ck, cv, kv_len=kv_len)
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bsk,kd->bsd", o.reshape(b, s, h * hd), p["wo"])
+    return out, new_cache
+
+
+def _mla_attend(p, cfg: LMConfig, x, positions, mode, cache=None, pos=None,
+                absorb: bool = True):
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"]).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"])
+    c_kv, k_rope = ckv_full[..., : m.kv_lora_rank], ckv_full[..., m.kv_lora_rank:]
+    c_kv = L.rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # 1 head
+
+    def expand_kv(ckv):
+        k_nope = jnp.einsum("bsl,lk->bsk", ckv, p["w_uk"]).reshape(-1, ckv.shape[1], h, nope)
+        vv = jnp.einsum("bsl,lk->bsk", ckv, p["w_uv"]).reshape(-1, ckv.shape[1], h, vd)
+        return k_nope, vv
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        k_nope, v = expand_kv(c_kv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope_d))], -1)
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        # pad v to qk head dim so the fused kernel sees uniform head_dim
+        o = kops.attention(qq, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nope + rope_d - vd))), causal=True)
+        o = o[..., :vd]
+        if mode == "prefill":
+            new_cache = {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+    else:  # decode
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, pos, 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope[:, :, 0, :], (0, pos, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        kv_len = jnp.full((b,), pos + 1, jnp.int32)
+        if absorb:
+            # project q_nope into latent space: (b,1,h,nope) @ (lora,h*nope)^T
+            w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, nope)
+            q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)  # (b,1,h,lora)
+            # scores: latent part + rope part — cache stays in storage
+            # dtype (f32 casts of a 512k-long latent cache are terabytes)
+            scale = 1.0 / math.sqrt(nope + rope_d)
+            sc = (
+                jnp.einsum("bshl,btl->bhst", q_lat, cc,
+                           preferred_element_type=jnp.float32)
+                + jnp.einsum("bshr,btr->bhst", q_rope, cr,
+                             preferred_element_type=jnp.float32)
+            ) * scale
+            t_idx = jnp.arange(cc.shape[1])
+            valid = t_idx[None, :] < kv_len[:, None]
+            sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+            w = jax.nn.softmax(sc, axis=-1)
+            o_lat = jnp.einsum("bhst,btl->bshl", w.astype(cc.dtype), cc,
+                               preferred_element_type=jnp.float32)
+            w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, vd)
+            o = jnp.einsum("bshl,lhv->bshv", o_lat.astype(x.dtype), w_uv).astype(x.dtype)
+        else:
+            k_nope, v = expand_kv(cc)
+            k = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(cr[:, :, None, :], (*cr.shape[:2], h, rope_d))], -1
+            )
+            qq = jnp.concatenate([q_nope, q_rope], -1)
+            o = kops.decode_attention(qq, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nope + rope_d - vd))), kv_len=kv_len)
+            o = o[..., :vd]
+    out = jnp.einsum("bsk,kd->bsd", o.reshape(b, s, h * vd), p["wo"])
+    return out, new_cache
+
+
+def _block(p, cfg: LMConfig, x, positions, mode, use_moe, cache=None, pos=None,
+           absorb=True):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, new_cache = _mla_attend(p["attn"], cfg, h, positions, mode, cache, pos, absorb)
+    else:
+        a, new_cache = _gqa_attend(p["attn"], cfg, h, positions, mode, cache, pos)
+    x = x + a
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if use_moe:
+        f, aux = moe_block(p["moe"], cfg, h)
+    else:
+        f = L.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    return x + f, new_cache, aux
+
+
+def _remat_policy(cfg):
+    if cfg.remat == "full":
+        return None  # save nothing
+    if cfg.remat == "dots_saveable":
+        return jax.checkpoint_policies.dots_saveable
+    return None
+
+
+def _scan_blocks(blocks, cfg, x, positions, mode, use_moe, caches=None,
+                 pos=None, absorb=True):
+    """Run a homogeneous stack (stacked on axis 0): lax.scan when
+    cfg.scan_layers (compact HLO), python unroll otherwise (exact
+    dry-run cost accounting)."""
+
+    def body(carry, xs):
+        xb, aux_acc = carry
+        p, c = xs
+        y, new_c, aux = _block(p, cfg, xb, positions, mode, use_moe, c, pos, absorb)
+        return (y, aux_acc + aux), new_c
+
+    body_fn = body
+    if cfg.remat != "none" and mode == "train":
+        body_fn = jax.checkpoint(body, policy=_remat_policy(cfg))
+
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(
+            body_fn, (x, jnp.zeros((), jnp.float32)), (blocks, caches)
+        )
+        return x, new_caches, aux
+
+    n_layers = jax.tree_util.tree_leaves(blocks)[0].shape[0]
+    carry = (x, jnp.zeros((), jnp.float32))
+    outs = []
+    for i in range(n_layers):
+        p_i = jax.tree_util.tree_map(lambda a: a[i], blocks)
+        c_i = (None if caches is None
+               else jax.tree_util.tree_map(lambda a: a[i], caches))
+        carry, new_c = body_fn(carry, (p_i, c_i))
+        outs.append(new_c)
+    x, aux = carry
+    if outs and outs[0] is not None:
+        new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        new_caches = None
+    return x, new_caches, aux
+
+
+def _trunk(params, cfg: LMConfig, x, positions, mode, caches=None, pos=None,
+           absorb=True):
+    """Runs all blocks. caches: dict with same keys as params block stacks."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for name, use_moe in (("blocks_dense", False), ("blocks_moe", True)):
+        if name not in params:
+            continue
+        c = caches[name] if caches is not None else None
+        x, nc, aux = _scan_blocks(params[name], cfg, x, positions, mode, use_moe, c, pos, absorb)
+        aux_total = aux_total + aux
+        new_caches[name] = nc
+    return x, new_caches, aux_total
+
+
+def _make_cache_placeholder(cfg, n_layers, b, s_max, dtype):
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((n_layers, b, s_max, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((n_layers, b, s_max, m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((n_layers, b, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_layers, b, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    """Full KV cache pytree (stacked per homogeneous block group)."""
+    dt = _dt(cfg)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+    caches = {}
+    if n_dense:
+        caches["blocks_dense"] = _make_cache_placeholder(cfg, n_dense, batch, max_len, dt)
+    if n_moe:
+        caches["blocks_moe"] = _make_cache_placeholder(cfg, n_moe, batch, max_len, dt)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def _logits(params, cfg, x):
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, w)
+    return jnp.einsum("bsd,dv->bsv", x, w)
+
+
+def forward_train(params, cfg: LMConfig, tokens):
+    """tokens (B,S) -> logits (B,S,V), aux loss scalar."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]  # gather
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    x, _, aux = _trunk(params, cfg, x, positions, "train")
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: LMConfig, tokens, labels):
+    logits, aux = forward_train(params, cfg, tokens)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # label log-prob via one-hot contraction: shards cleanly over a
+    # vocab-sharded logits tensor (take_along_axis would force XLA to
+    # all-gather the full (B,S,V) logits — hundreds of GB/device)
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=logits.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    ce = jnp.mean(lse - ll)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params, cfg: LMConfig, tokens):
+    """tokens (B,S) -> (last-token logits (B,V), cache)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    x, caches, _ = _trunk(params, cfg, x, positions, "prefill")
+    return _logits(params, cfg, x[:, -1:, :])[:, 0], caches
+
+
+def decode_step(params, cfg: LMConfig, token, caches, pos, absorb: bool = True):
+    """token (B,1) int32; caches from init_cache/prefill; pos scalar int32.
+
+    Returns (logits (B,V), new_caches).
+    """
+    x = params["embed"][token]
+    positions = jnp.full(token.shape, pos, jnp.int32)
+    x, new_caches, _ = _trunk(params, cfg, x, positions, "decode", caches, pos, absorb)
+    return _logits(params, cfg, x)[:, 0], new_caches

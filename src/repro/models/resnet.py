@@ -1,0 +1,120 @@
+"""ResNet-152 — bottleneck blocks with BatchNorm.
+
+BN is functional: params hold (scale, bias), a separate ``bn_state``
+pytree holds running (mean, var). ``forward(..., train=True)`` uses
+batch statistics (a sharded batch turns the reduction into a global
+all-reduce — sync-BN for free under pjit) and returns updated running
+stats; eval uses the running stats.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VisionConfig
+from repro.models import layers as L
+
+BN_MOM = 0.9
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _bn_init(c, dt):
+    return {"scale": jnp.ones((c,), dt), "bias": jnp.zeros((c,), dt)}
+
+
+def _bn_state_init(c):
+    return {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+
+
+def _init_bottleneck(key, c_in, c_mid, c_out, dt, has_proj):
+    ks = jax.random.split(key, 4)
+    p = {
+        "w1": L.conv_init(ks[0], 1, 1, c_in, c_mid, dt), "bn1": _bn_init(c_mid, dt),
+        "w2": L.conv_init(ks[1], 3, 3, c_mid, c_mid, dt), "bn2": _bn_init(c_mid, dt),
+        "w3": L.conv_init(ks[2], 1, 1, c_mid, c_out, dt), "bn3": _bn_init(c_out, dt),
+    }
+    s = {"bn1": _bn_state_init(c_mid), "bn2": _bn_state_init(c_mid), "bn3": _bn_state_init(c_out)}
+    if has_proj:
+        p["proj_w"] = L.conv_init(ks[3], 1, 1, c_in, c_out, dt)
+        p["proj_bn"] = _bn_init(c_out, dt)
+        s["proj_bn"] = _bn_state_init(c_out)
+    return p, s
+
+
+def init(key, cfg: VisionConfig) -> Tuple[dict, dict]:
+    dt = _dt(cfg)
+    w = cfg.width
+    ks = jax.random.split(key, 2 + sum(cfg.depths))
+    params = {"stem_w": L.conv_init(ks[0], 7, 7, 3, w, dt), "stem_bn": _bn_init(w, dt)}
+    state = {"stem_bn": _bn_state_init(w)}
+    c_in = w
+    ki = 1
+    blocks, bstates = [], []
+    for i, dep in enumerate(cfg.depths):
+        c_mid = w * (2 ** i)
+        c_out = c_mid * 4
+        stage_p, stage_s = [], []
+        for b in range(dep):
+            p, s = _init_bottleneck(ks[ki], c_in, c_mid, c_out, dt, b == 0)
+            ki += 1
+            stage_p.append(p)
+            stage_s.append(s)
+            c_in = c_out
+        blocks.append(stage_p)
+        bstates.append(stage_s)
+    params["stages"] = blocks
+    state["stages"] = bstates
+    params["head"] = L.dense_init(ks[ki], c_in, cfg.n_classes, dt, 0.02)
+    return params, state
+
+
+def _bn(x, p, s, train):
+    if train:
+        y, mu, var = L.batchnorm_train(x, p["scale"], p["bias"])
+        new_s = {
+            "mean": BN_MOM * s["mean"] + (1 - BN_MOM) * mu,
+            "var": BN_MOM * s["var"] + (1 - BN_MOM) * var,
+        }
+        return y, new_s
+    return L.batchnorm_eval(x, p["scale"], p["bias"], s["mean"], s["var"]), s
+
+
+def _bottleneck(p, s, x, stride, train):
+    h, s1 = _bn(L.conv2d(x, p["w1"]), p["bn1"], s["bn1"], train)
+    h = jax.nn.relu(h)
+    h, s2 = _bn(L.conv2d(h, p["w2"], stride=stride), p["bn2"], s["bn2"], train)
+    h = jax.nn.relu(h)
+    h, s3 = _bn(L.conv2d(h, p["w3"]), p["bn3"], s["bn3"], train)
+    new_s = {"bn1": s1, "bn2": s2, "bn3": s3}
+    if "proj_w" in p:
+        sc, sp = _bn(L.conv2d(x, p["proj_w"], stride=stride), p["proj_bn"], s["proj_bn"], train)
+        new_s["proj_bn"] = sp
+    else:
+        sc = x
+    return jax.nn.relu(h + sc), new_s
+
+
+def forward(params, state, cfg: VisionConfig, images, train: bool = False):
+    """-> (logits (B, n_classes), new_bn_state)."""
+    x = L.conv2d(images.astype(_dt(cfg)), params["stem_w"], stride=2)
+    x, stem_s = _bn(x, params["stem_bn"], state["stem_bn"], train)
+    x = jax.nn.relu(x)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+    new_state = {"stem_bn": stem_s, "stages": []}
+    for i, (stage_p, stage_s) in enumerate(zip(params["stages"], state["stages"])):
+        new_stage = []
+        for b, (p, s) in enumerate(zip(stage_p, stage_s)):
+            stride = 2 if (b == 0 and i > 0) else 1
+            fn = lambda p, s, x: _bottleneck(p, s, x, stride, train)
+            if cfg.remat != "none" and train:
+                fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+            x, ns = fn(p, s, x)
+            new_stage.append(ns)
+        new_state["stages"].append(new_stage)
+    x = jnp.mean(x, axis=(1, 2))
+    return jnp.einsum("bd,dc->bc", x, params["head"]).astype(jnp.float32), new_state

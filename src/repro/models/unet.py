@@ -1,0 +1,212 @@
+"""SD-1.5-class UNet — res blocks with time embedding, spatial
+transformer blocks (self-attn + cross-attn over a ctx_len text stub +
+GEGLU FF) at the configured levels, skip-connected encoder/decoder.
+
+Modality frontend is a stub per the assignment: the model consumes VAE
+latents (img_res/8, 4ch) and precomputed text embeddings (B, 77, 768).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiffusionConfig
+from repro.models import layers as L
+from repro.kernels import ops as kops
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init_res(key, c_in, c_out, temb_dim, dt):
+    ks = jax.random.split(key, 4)
+    p = {
+        "gn1_s": jnp.ones((c_in,), dt), "gn1_b": jnp.zeros((c_in,), dt),
+        "w1": L.conv_init(ks[0], 3, 3, c_in, c_out, dt),
+        "temb_w": L.dense_init(ks[1], temb_dim, c_out, dt),
+        "temb_b": jnp.zeros((c_out,), dt),
+        "gn2_s": jnp.ones((c_out,), dt), "gn2_b": jnp.zeros((c_out,), dt),
+        "w2": L.conv_init(ks[2], 3, 3, c_out, c_out, dt),
+    }
+    if c_in != c_out:
+        p["skip_w"] = L.conv_init(ks[3], 1, 1, c_in, c_out, dt)
+    return p
+
+
+def _init_xformer(key, c, ctx_dim, dt):
+    ks = jax.random.split(key, 10)
+    return {
+        "gn_s": jnp.ones((c,), dt), "gn_b": jnp.zeros((c,), dt),
+        "proj_in": L.dense_init(ks[0], c, c, dt),
+        "ln1_s": jnp.ones((c,), dt), "ln1_b": jnp.zeros((c,), dt),
+        "sa_qkv": L.dense_init(ks[1], c, 3 * c, dt),
+        "sa_o": L.dense_init(ks[2], c, c, dt),
+        "ln2_s": jnp.ones((c,), dt), "ln2_b": jnp.zeros((c,), dt),
+        "ca_q": L.dense_init(ks[3], c, c, dt),
+        "ca_k": L.dense_init(ks[4], ctx_dim, c, dt),
+        "ca_v": L.dense_init(ks[5], ctx_dim, c, dt),
+        "ca_o": L.dense_init(ks[6], c, c, dt),
+        "ln3_s": jnp.ones((c,), dt), "ln3_b": jnp.zeros((c,), dt),
+        "ff_in": L.dense_init(ks[7], c, 8 * c, dt),  # GEGLU: 2x4c
+        "ff_out": L.dense_init(ks[8], 4 * c, c, dt),
+        "proj_out": L.dense_init(ks[9], c, c, dt),
+    }
+
+
+def init(key, cfg: DiffusionConfig):
+    dt = _dt(cfg)
+    ch = cfg.ch
+    temb_dim = 4 * ch
+    chans = [ch * m for m in cfg.ch_mult]
+    ks = iter(jax.random.split(key, 256))
+    p = {
+        "t_w1": L.dense_init(next(ks), ch, temb_dim, dt), "t_b1": jnp.zeros((temb_dim,), dt),
+        "t_w2": L.dense_init(next(ks), temb_dim, temb_dim, dt), "t_b2": jnp.zeros((temb_dim,), dt),
+        "conv_in": L.conv_init(next(ks), 3, 3, cfg.latent_ch, ch, dt),
+    }
+    # down path
+    down = []
+    c_prev = ch
+    for lvl, c in enumerate(chans):
+        blocks = []
+        for _ in range(cfg.n_res_blocks):
+            blk = {"res": _init_res(next(ks), c_prev, c, temb_dim, dt)}
+            if lvl in cfg.attn_levels:
+                blk["attn"] = _init_xformer(next(ks), c, cfg.ctx_dim, dt)
+            blocks.append(blk)
+            c_prev = c
+        stage = {"blocks": blocks}
+        if lvl + 1 < len(chans):
+            stage["down_w"] = L.conv_init(next(ks), 3, 3, c, c, dt)
+        down.append(stage)
+    p["down"] = down
+    # mid
+    p["mid"] = {
+        "res1": _init_res(next(ks), c_prev, c_prev, temb_dim, dt),
+        "attn": _init_xformer(next(ks), c_prev, cfg.ctx_dim, dt),
+        "res2": _init_res(next(ks), c_prev, c_prev, temb_dim, dt),
+    }
+    # up path (consumes skips: n_res_blocks+1 per level, reverse order)
+    up = []
+    skip_chans = [ch] + [c for lvl, c in enumerate(chans) for _ in range(cfg.n_res_blocks)]
+    # skips pushed after conv_in and each down block and each downsample
+    full_skips = [ch]
+    c_prev2 = ch
+    for lvl, c in enumerate(chans):
+        for _ in range(cfg.n_res_blocks):
+            full_skips.append(c)
+            c_prev2 = c
+        if lvl + 1 < len(chans):
+            full_skips.append(c)
+    c_cur = chans[-1]
+    for lvl in reversed(range(len(chans))):
+        c = chans[lvl]
+        blocks = []
+        for _ in range(cfg.n_res_blocks + 1):
+            skip_c = full_skips.pop()
+            blk = {"res": _init_res(next(ks), c_cur + skip_c, c, temb_dim, dt)}
+            if lvl in cfg.attn_levels:
+                blk["attn"] = _init_xformer(next(ks), c, cfg.ctx_dim, dt)
+            blocks.append(blk)
+            c_cur = c
+        stage = {"blocks": blocks}
+        if lvl > 0:
+            stage["up_w"] = L.conv_init(next(ks), 3, 3, c, c, dt)
+        up.append(stage)
+    p["up"] = up
+    p["gn_out_s"] = jnp.ones((ch,), dt)
+    p["gn_out_b"] = jnp.zeros((ch,), dt)
+    p["conv_out"] = L.conv_init(next(ks), 3, 3, ch, cfg.latent_ch, dt)
+    return p
+
+
+def _res(p, x, temb):
+    h = jax.nn.silu(L.groupnorm(x, p["gn1_s"], p["gn1_b"]))
+    h = L.conv2d(h, p["w1"])
+    h = h + (jnp.einsum("bd,dc->bc", jax.nn.silu(temb), p["temb_w"]) + p["temb_b"])[:, None, None, :]
+    h = jax.nn.silu(L.groupnorm(h, p["gn2_s"], p["gn2_b"]))
+    h = L.conv2d(h, p["w2"])
+    skip = L.conv2d(x, p["skip_w"]) if "skip_w" in p else x
+    return h + skip
+
+
+def _xformer(p, cfg, x, ctx):
+    b, hh, ww, c = x.shape
+    heads = max(1, c // 64)
+    res = x
+    h = L.groupnorm(x, p["gn_s"], p["gn_b"]).reshape(b, hh * ww, c)
+    h = jnp.einsum("bsc,cd->bsd", h, p["proj_in"])
+    # self-attention
+    y = L.layernorm(h, p["ln1_s"], p["ln1_b"])
+    qkv = jnp.einsum("bsc,ck->bsk", y, p["sa_qkv"]).reshape(b, hh * ww, 3 * heads, c // heads)
+    q, k, v = jnp.split(qkv, 3, axis=2)
+    a = kops.attention(q, k, v, causal=False).reshape(b, hh * ww, c)
+    h = h + jnp.einsum("bsc,cd->bsd", a, p["sa_o"])
+    # cross-attention over text ctx
+    y = L.layernorm(h, p["ln2_s"], p["ln2_b"])
+    q = jnp.einsum("bsc,ck->bsk", y, p["ca_q"]).reshape(b, hh * ww, heads, c // heads)
+    k = jnp.einsum("btc,ck->btk", ctx.astype(y.dtype), p["ca_k"]).reshape(b, -1, heads, c // heads)
+    v = jnp.einsum("btc,ck->btk", ctx.astype(y.dtype), p["ca_v"]).reshape(b, -1, heads, c // heads)
+    a = kops.attention(q, k, v, causal=False).reshape(b, hh * ww, c)
+    h = h + jnp.einsum("bsc,cd->bsd", a, p["ca_o"])
+    # GEGLU FF
+    y = L.layernorm(h, p["ln3_s"], p["ln3_b"])
+    u = jnp.einsum("bsc,ck->bsk", y, p["ff_in"])
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    h = h + jnp.einsum("bsf,fc->bsc", u1 * jax.nn.gelu(u2), p["ff_out"])
+    h = jnp.einsum("bsc,cd->bsd", h, p["proj_out"]).reshape(b, hh, ww, c)
+    return h + res
+
+
+def forward(params, cfg: DiffusionConfig, latents, t, ctx, train: bool = False):
+    """latents (B,Hl,Wl,4), t (B,), ctx (B,ctx_len,ctx_dim) -> eps (B,Hl,Wl,4)."""
+    dt = _dt(cfg)
+    x = latents.astype(dt)
+    temb = L.sinusoidal_embedding(t, cfg.ch).astype(dt)
+    temb = jnp.einsum("bc,cd->bd", temb, params["t_w1"]) + params["t_b1"]
+    temb = jnp.einsum("bd,dk->bk", jax.nn.silu(temb), params["t_w2"]) + params["t_b2"]
+
+    def maybe_ckpt(fn):
+        if cfg.remat != "none" and train:
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+        return fn
+
+    h = L.conv2d(x, params["conv_in"])
+    skips = [h]
+    n_levels = len(params["down"])
+    for lvl, stage in enumerate(params["down"]):
+        for blk in stage["blocks"]:
+            def down_blk(h, blk=blk):
+                h = _res(blk["res"], h, temb)
+                if "attn" in blk:
+                    h = _xformer(blk["attn"], cfg, h, ctx)
+                return h
+            h = maybe_ckpt(down_blk)(h)
+            skips.append(h)
+        if "down_w" in stage:
+            h = L.conv2d(h, stage["down_w"], stride=2)
+            skips.append(h)
+
+    m = params["mid"]
+    h = _res(m["res1"], h, temb)
+    h = _xformer(m["attn"], cfg, h, ctx)
+    h = _res(m["res2"], h, temb)
+
+    for i, stage in enumerate(params["up"]):
+        for blk in stage["blocks"]:
+            skip = skips.pop()
+            def up_blk(h, blk=blk, skip=skip):
+                h = jnp.concatenate([h, skip], axis=-1)
+                h = _res(blk["res"], h, temb)
+                if "attn" in blk:
+                    h = _xformer(blk["attn"], cfg, h, ctx)
+                return h
+            h = maybe_ckpt(up_blk)(h)
+        if "up_w" in stage:
+            b, hh, ww, c = h.shape
+            h = jax.image.resize(h, (b, hh * 2, ww * 2, c), "nearest")
+            h = L.conv2d(h, stage["up_w"])
+
+    h = jax.nn.silu(L.groupnorm(h, params["gn_out_s"], params["gn_out_b"]))
+    return L.conv2d(h, params["conv_out"]).astype(jnp.float32)

@@ -1,0 +1,94 @@
+"""Vision Transformer (ViT-L/16, ViT-H/14) — pre-norm, cls token,
+learned position embeddings, GELU MLP, scan-over-layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import VisionConfig
+from repro.models import layers as L
+from repro.kernels import ops as kops
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init_block(key, cfg: VisionConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1_s": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+        "ln2_s": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+        "wqkv": L.dense_init(ks[0], d, 3 * d, dt),
+        "bqkv": jnp.zeros((3 * d,), dt),
+        "wo": L.dense_init(ks[1], d, d, dt),
+        "bo": jnp.zeros((d,), dt),
+        "w_in": L.dense_init(ks[2], d, f, dt),
+        "b_in": jnp.zeros((f,), dt),
+        "w_out": L.dense_init(ks[3], f, d, dt),
+        "b_out": jnp.zeros((d,), dt),
+    }
+
+
+def init(key, cfg: VisionConfig):
+    dt = _dt(cfg)
+    n_tok = (cfg.img_res // cfg.patch) ** 2 + 1  # + cls
+    ks = jax.random.split(key, 5)
+    params = {
+        "patch_w": L.conv_init(ks[0], cfg.patch, cfg.patch, 3, cfg.d_model, dt),
+        "patch_b": jnp.zeros((cfg.d_model,), dt),
+        "cls": L.truncated_normal(ks[1], (1, 1, cfg.d_model), dt, 0.02),
+        "pos": L.truncated_normal(ks[2], (1, n_tok, cfg.d_model), dt, 0.02),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(
+            jax.random.split(ks[3], cfg.n_layers)
+        ),
+        "ln_f_s": jnp.ones((cfg.d_model,), dt),
+        "ln_f_b": jnp.zeros((cfg.d_model,), dt),
+        "head": L.dense_init(ks[4], cfg.d_model, cfg.n_classes, dt, 0.02),
+    }
+    return params
+
+
+def _block(p, cfg, x):
+    b, s, d = x.shape
+    h = L.layernorm(x, p["ln1_s"], p["ln1_b"])
+    qkv = jnp.einsum("bsd,dk->bsk", h, p["wqkv"]) + p["bqkv"]
+    q, k, v = jnp.split(qkv.reshape(b, s, 3 * cfg.n_heads, d // cfg.n_heads), 3, axis=2)
+    a = kops.attention(q, k, v, causal=False)
+    x = x + jnp.einsum("bsd,dk->bsk", a.reshape(b, s, d), p["wo"]) + p["bo"]
+    h = L.layernorm(x, p["ln2_s"], p["ln2_b"])
+    return x + L.gelu_mlp(h, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+
+
+def forward(params, cfg: VisionConfig, images, train: bool = False):
+    """images (B, H, W, 3) -> logits (B, n_classes)."""
+    x = L.conv2d(images.astype(_dt(cfg)), params["patch_w"], stride=cfg.patch,
+                 padding="VALID") + params["patch_b"]
+    b, gh, gw, d = x.shape
+    x = x.reshape(b, gh * gw, d)
+    # interpolate pos embedding if resolution differs from init (cls_384)
+    pos = params["pos"]
+    n_img = pos.shape[1] - 1
+    if gh * gw != n_img:
+        side = int(round(n_img ** 0.5))
+        grid = pos[:, 1:, :].reshape(1, side, side, d)
+        grid = jax.image.resize(grid.astype(jnp.float32), (1, gh, gw, d), "bilinear").astype(pos.dtype)
+        pos = jnp.concatenate([pos[:, :1, :], grid.reshape(1, gh * gw, d)], axis=1)
+    cls = jnp.broadcast_to(params["cls"], (b, 1, d)).astype(x.dtype)
+    x = jnp.concatenate([cls, x], axis=1) + pos
+
+    def body(xb, p):
+        return _block(p, cfg, xb), None
+
+    if cfg.remat != "none" and train:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.dots_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = body(x, jax.tree_util.tree_map(lambda a: a[i], params["blocks"]))
+    x = L.layernorm(x, params["ln_f_s"], params["ln_f_b"])
+    return jnp.einsum("bd,dc->bc", x[:, 0, :], params["head"]).astype(jnp.float32)

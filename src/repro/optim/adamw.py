@@ -1,0 +1,75 @@
+"""AdamW with global-norm clipping (pure JAX, optax-free)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale, tree), n
+
+
+def adamw(lr: Union[float, Callable], b1=0.9, b2=0.999, eps=1e-8,
+          weight_decay=0.01, clip_norm=1.0):
+    """Returns (init_fn, update_fn).
+
+    update_fn(grads, state, params) -> (new_params, new_state, metrics).
+    Optimizer state is kept in f32 regardless of param dtype (mixed
+    precision: bf16 params, f32 moments).
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state.mu)
+        flat_v = jax.tree_util.tree_leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr_t}
+
+    return init, update

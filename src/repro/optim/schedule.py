@@ -1,0 +1,19 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                       floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)

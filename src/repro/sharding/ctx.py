@@ -1,0 +1,58 @@
+"""Activation sharding constraints that degrade to no-ops off-mesh.
+
+Models call ``constrain(x, ..axes..)`` at layout-critical points (MoE
+dispatch buffers, attention outputs). Under a mesh context (pjit/dry-run)
+it emits ``with_sharding_constraint``; in plain CPU tests (no mesh) it
+is a no-op, so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or not m.axis_names:
+            return None
+        return m
+    except Exception:
+        return None
+
+
+def axis_size(name: str):
+    """Size of a mesh axis in the active mesh (None when off-mesh)."""
+    m = _active_mesh()
+    if m is None:
+        return None
+    sizes = dict(zip(m.axis_names, m.axis_sizes))
+    return sizes.get(name)
+
+
+def constrain(x, *spec):
+    """spec entries: axis name(s) or None, one per dim of x."""
+    m = _active_mesh()
+    if m is None:
+        return x
+    sizes = dict(zip(m.axis_names, m.axis_sizes))
+    parts = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            parts.append(None)
+            continue
+        axs = (ax,) if isinstance(ax, str) else tuple(ax)
+        # keep the subset of axes this mesh actually has (e.g. "pod"
+        # only exists on the multi-pod mesh)
+        axs = tuple(a for a in axs if a in sizes)
+        if not axs:
+            parts.append(None)
+            continue
+        n = 1
+        for a in axs:
+            n *= sizes[a]
+        parts.append((axs if len(axs) > 1 else axs[0]) if dim % n == 0 else None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except Exception:
+        return x

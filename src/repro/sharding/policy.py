@@ -1,0 +1,100 @@
+"""Input/activation sharding policies per (family, shape, mesh).
+
+One place to audit how every dry-run cell is laid out:
+
+- batch shards over ("pod","data") when divisible, over a prefix of
+  those axes when partially divisible, else falls back to
+  sequence/spatial sharding (gen_1024 B=4, serve_b1/long_500k B=1).
+- decode KV caches shard their *length* dim over "data" when the batch
+  can't use it (long_500k: 512k-token cache, B=1) — flash-decode style.
+- spatial dims shard over "data" for big-image diffusion cells.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh, batch: int) -> Tuple:
+    """Largest prefix of ("pod","data") whose product divides `batch`."""
+    sizes = _mesh_axis_sizes(mesh)
+    axes = [a for a in ("pod", "data") if a in sizes]
+    chosen = []
+    prod = 1
+    for a in axes:
+        if batch % (prod * sizes[a]) == 0:
+            chosen.append(a)
+            prod *= sizes[a]
+    return tuple(chosen)
+
+
+def free_data_axis(mesh, batch_ax: Tuple) -> Optional[str]:
+    """The 'data' axis if the batch didn't consume it (for seq/spatial)."""
+    return "data" if "data" not in batch_ax else None
+
+
+def lm_specs(mesh, kind: str, batch: int, seq: int):
+    """Returns dict of PartitionSpec for LM step inputs."""
+    ba = batch_axes(mesh, batch)
+    bspec = ba if ba else None
+    if kind == "train":
+        return {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if kind == "prefill":
+        return {"tokens": P(bspec, None)}
+    return {"token": P(bspec, None)}
+
+
+def cache_len_axes(mesh, batch: int, seq: int):
+    """KV-cache *length* sharding (flash-decode layout): the model axis
+    always (heads rarely divide 16; length does), plus the data axis
+    when the batch leaves it free. Attention flops/bytes then spread
+    over every chip; per-step softmax stats are the only cross-shard
+    traffic (KB, not the GB-scale head all-gathers of head sharding)."""
+    ba = batch_axes(mesh, batch)
+    sizes = _mesh_axis_sizes(mesh)
+    axes = []
+    if "data" not in ba and "data" in sizes:
+        axes.append("data")
+    if "model" in sizes:
+        axes.append("model")
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    if axes and seq % n == 0:
+        return tuple(axes)
+    return None
+
+
+def lm_cache_spec(mesh, cfg, batch: int, len_axes):
+    """PartitionSpec pytree for the stacked KV cache."""
+    ba = batch_axes(mesh, batch)
+    bspec = ba if ba else None
+    la = len_axes if len_axes else None
+    if cfg.mla is not None:
+        return {
+            "c_kv": P(None, bspec, la, None),
+            "k_rope": P(None, bspec, la, None),
+        }
+    return {
+        "k": P(None, bspec, la, None, None),
+        "v": P(None, bspec, la, None, None),
+    }
+
+
+def image_specs(mesh, batch: int, spatial_dims: int = 2):
+    """(B, H, W, C)-style inputs: batch over pod/data, else H over data."""
+    ba = batch_axes(mesh, batch)
+    bspec = ba if ba else None
+    fd = free_data_axis(mesh, ba)
+    return P(bspec, fd, None, None)
+
+
+def token_image_specs(mesh, batch: int):
+    ba = batch_axes(mesh, batch)
+    return P(ba if ba else None, None, None, None)

@@ -1,0 +1,162 @@
+"""Parameter sharding rules: param-tree path patterns -> PartitionSpec.
+
+TP over the "model" axis (column/row-parallel matmuls, expert
+parallelism for MoE, channel parallelism for convs); everything small
+(norms, routers, biases) replicated. Rules are suffix-regexes over the
+'/'-joined tree path; first match wins, default replicate.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Rules = List[Tuple[str, P]]
+
+# stacked LM blocks carry a leading layer dim -> specs below include it
+LM_RULES: Rules = [
+    (r"embed$", P("model", None)),
+    (r"lm_head$", P(None, "model")),
+    # GQA attention
+    (r"attn/w[qkv]$", P(None, None, "model")),
+    (r"attn/wo$", P(None, "model", None)),
+    # MLA
+    (r"attn/w_dkv$", P(None, None, None)),
+    (r"attn/w_u[kv]$", P(None, None, "model")),
+    # dense FFN
+    (r"mlp/w_(gate|up)$", P(None, None, "model")),
+    (r"mlp/w_down$", P(None, "model", None)),
+    # MoE: experts sharded over the model axis (EP)
+    (r"moe/w_(gate|up)$", P(None, "model", None, None)),
+    (r"moe/w_down$", P(None, "model", None, None)),
+    (r"moe/shared/w_(gate|up)$", P(None, None, "model")),
+    (r"moe/shared/w_down$", P(None, "model", None)),
+]
+
+VIT_RULES: Rules = [
+    (r"patch_w$", P(None, None, None, "model")),
+    (r"blocks/wqkv$", P(None, None, "model")),
+    (r"blocks/wo$", P(None, "model", None)),
+    (r"blocks/w_in$", P(None, None, "model")),
+    (r"blocks/w_out$", P(None, "model", None)),
+    (r"head$", P(None, "model")),
+]
+
+CONVNEXT_RULES: Rules = [
+    (r"stem_w$", P(None, None, None, "model")),
+    (r"stages/\d+/pw1$", P(None, None, "model")),
+    (r"stages/\d+/pw2$", P(None, "model", None)),
+    (r"downs/\d+/w$", P(None, None, None, "model")),
+    (r"head$", P(None, "model")),
+]
+
+RESNET_RULES: Rules = [
+    (r"w[123]$", P(None, None, None, "model")),
+    (r"proj_w$", P(None, None, None, "model")),
+    (r"stem_w$", P(None, None, None, "model")),
+    (r"head$", P("model", None)),
+]
+
+DIT_RULES: Rules = [
+    (r"blocks/wqkv$", P(None, None, "model")),
+    (r"blocks/wo$", P(None, "model", None)),
+    (r"blocks/w_in$", P(None, None, "model")),
+    (r"blocks/w_out$", P(None, "model", None)),
+    (r"blocks/ada_w$", P(None, None, "model")),
+    (r"y_emb$", P("model", None)),
+]
+
+UNET_RULES: Rules = [
+    (r"/w[12]$", P(None, None, None, "model")),
+    (r"skip_w$", P(None, None, None, "model")),
+    (r"(down|up)_w$", P(None, None, None, "model")),
+    (r"sa_qkv$", P(None, "model")),
+    (r"sa_o$", P("model", None)),
+    (r"ca_[qkv]$", P(None, "model")),
+    (r"ca_o$", P("model", None)),
+    (r"ff_in$", P(None, "model")),
+    (r"ff_out$", P("model", None)),
+    (r"proj_(in|out)$", P(None, "model")),
+    (r"temb_w$", P(None, "model")),
+]
+
+DETECTOR_RULES: Rules = [
+    (r"stem$", P(None, None, None, "model")),
+    (r"stages/\d+/\d+/w$", P(None, None, None, "model")),
+    (r"head_w$", P(None, None, "model", None)),
+]
+
+
+def rules_for(cfg) -> Rules:
+    fam = cfg.family
+    if fam == "lm":
+        return LM_RULES
+    if fam == "vision":
+        return {"vit": VIT_RULES, "convnext": CONVNEXT_RULES,
+                "resnet": RESNET_RULES}[cfg.kind]
+    if fam == "diffusion":
+        return DIT_RULES if cfg.kind == "dit" else UNET_RULES
+    if fam == "detector":
+        return DETECTOR_RULES
+    raise KeyError(fam)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, ndim: int, rules: Rules) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path_str):
+            if len(spec) == ndim:
+                return spec
+            # rank mismatch (e.g. un-stacked vs stacked): right-align
+            if len(spec) < ndim:
+                return P(*([None] * (ndim - len(spec)) + list(spec)))
+            return P(*spec[len(spec) - ndim:])
+    return P(*([None] * ndim))
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop spec axes whose mesh size doesn't divide the dim (pjit input
+    shardings must divide evenly; falls back to replication per-dim)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            parts.append(None)
+            continue
+        axs = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = 1
+        for a in axs:
+            n *= sizes.get(a, 1)
+        parts.append(ax if dim % n == 0 else None)
+    return P(*parts)
+
+
+def param_specs(params, cfg, mesh=None):
+    """Pytree of PartitionSpec matching `params` (mesh-sanitized if a
+    mesh is given)."""
+    rules = rules_for(cfg)
+
+    def f(path, leaf):
+        s = spec_for_path(_path_str(path), leaf.ndim, rules)
+        return sanitize_spec(s, leaf.shape, mesh) if mesh is not None else s
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def param_shardings(params, mesh, cfg):
+    from jax.sharding import NamedSharding
+    specs = param_specs(params, cfg, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)

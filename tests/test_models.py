@@ -1,0 +1,206 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward / train step on CPU, asserting output shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.models import (convnext, detector, diffusion, dit, lm, resnet,
+                          unet, vit)
+
+KEY = jax.random.PRNGKey(0)
+
+LM_ARCHS = ["phi4-mini-3.8b", "qwen3-8b", "qwen2-moe-a2.7b", "deepseek-v2-lite-16b"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = reduced(get_config(arch))
+    params = lm.init(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, 1)
+    (loss, metrics), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+        params, cfg, tokens, labels)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_prefill_decode_consistency(arch):
+    cfg = reduced(get_config(arch))
+    params = lm.init(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+    full, _ = lm.forward_train(params, cfg, tokens)
+    logits_p, cache = lm.prefill(params, cfg, tokens[:, :6])
+    cache = jax.tree_util.tree_map(
+        lambda c: jnp.pad(c, [(0, 0), (0, 0), (0, 12 - c.shape[2])]
+                          + [(0, 0)] * (c.ndim - 3)), cache)
+    np.testing.assert_allclose(logits_p, full[:, 5], atol=2e-4)
+    for pos in range(6, 9):
+        logits_d, cache = lm.decode_step(params, cfg, tokens[:, pos:pos + 1],
+                                         cache, pos)
+        np.testing.assert_allclose(logits_d, full[:, pos], atol=2e-4)
+
+
+def test_mla_absorb_equivalence():
+    """Weight-absorbed MLA decode == naive decompress decode."""
+    cfg = reduced(get_config("deepseek-v2-lite-16b"))
+    params = lm.init(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    _, cache = lm.prefill(params, cfg, tokens[:, :4])
+    cache = jax.tree_util.tree_map(
+        lambda c: jnp.pad(c, [(0, 0), (0, 0), (0, 4)] + [(0, 0)] * (c.ndim - 3)),
+        cache)
+    la, _ = lm.decode_step(params, cfg, tokens[:, 4:5], cache, 4, absorb=True)
+    ln_, _ = lm.decode_step(params, cfg, tokens[:, 4:5], cache, 4, absorb=False)
+    np.testing.assert_allclose(la, ln_, atol=2e-4)
+
+
+def test_lm_scan_unroll_equivalence():
+    import dataclasses
+    cfg = reduced(get_config("qwen3-8b"))
+    params = lm.init(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    l1, _ = lm.forward_train(params, cfg, tokens)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    l2, _ = lm.forward_train(params, cfg2, tokens)
+    np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+
+def test_moe_routes_to_multiple_experts():
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    params = lm.init(KEY, cfg)
+    from repro.models.moe import moe_block
+    blk = jax.tree_util.tree_map(lambda a: a[0], params["blocks_moe"])
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    out, aux = moe_block(blk["moe"], cfg, x)
+    assert out.shape == x.shape
+    assert np.isfinite(float(aux))
+    # permutation-of-tokens equivariance (same group): routing is per-token
+    perm = jax.random.permutation(KEY, 16)
+    out_p, _ = moe_block(blk["moe"], cfg, x[:, perm])
+    np.testing.assert_allclose(out_p, out[:, perm], atol=1e-4)
+
+
+@pytest.mark.parametrize("arch,mod", [("vit-l16", vit), ("vit-h14", vit),
+                                      ("convnext-b", convnext)])
+def test_vision_smoke(arch, mod):
+    cfg = reduced(get_config(arch))
+    params = mod.init(KEY, cfg)
+    img = jax.random.uniform(KEY, (2, cfg.img_res, cfg.img_res, 3))
+
+    def loss(p):
+        lg = mod.forward(p, cfg, img, train=True)
+        return jnp.mean(jax.nn.logsumexp(lg, -1))
+
+    l, g = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l))
+    logits = mod.forward(params, cfg, img)
+    assert logits.shape == (2, cfg.n_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_vit_resolution_change():
+    """cls_384-style finetune shape: pos-emb interpolation path."""
+    cfg = reduced(get_config("vit-l16"))
+    params = vit.init(KEY, cfg)
+    img = jax.random.uniform(KEY, (1, cfg.img_res * 2, cfg.img_res * 2, 3))
+    logits = vit.forward(params, cfg, img)
+    assert logits.shape == (1, cfg.n_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_resnet_smoke_and_bn_state():
+    cfg = reduced(get_config("resnet-152"))
+    params, state = resnet.init(KEY, cfg)
+    img = jax.random.uniform(KEY, (4, cfg.img_res, cfg.img_res, 3))
+    logits, new_state = resnet.forward(params, state, cfg, img, train=True)
+    assert logits.shape == (4, cfg.n_classes)
+    # running stats moved
+    leaves0 = jax.tree_util.tree_leaves(state)
+    leaves1 = jax.tree_util.tree_leaves(new_state)
+    moved = any(float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(leaves0, leaves1))
+    assert moved
+    logits_eval, _ = resnet.forward(params, new_state, cfg, img, train=False)
+    assert np.isfinite(np.asarray(logits_eval)).all()
+
+
+def test_dit_smoke_train_and_sample():
+    cfg = reduced(get_config("dit-s2"))
+    params = dit.init(KEY, cfg)
+    lr = cfg.img_res // cfg.latent_factor
+    lat = jax.random.normal(KEY, (2, lr, lr, cfg.latent_ch))
+    y = jnp.array([1, 2])
+
+    def loss(p):
+        def eps_fn(x, t):
+            return dit.forward(p, cfg, x, t, y, train=True)[0]
+        return diffusion.train_loss(eps_fn, lat, KEY)
+
+    l, g = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l))
+    out = diffusion.sample(lambda x, t: dit.forward(params, cfg, x, t, y)[0],
+                           KEY, lat.shape, 4)
+    assert out.shape == lat.shape
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_dit_resolution_agnostic():
+    """gen_1024-style: larger latent grid with the same params."""
+    cfg = reduced(get_config("dit-s2"))
+    params = dit.init(KEY, cfg)
+    lr = cfg.img_res // cfg.latent_factor * 2
+    lat = jax.random.normal(KEY, (1, lr, lr, cfg.latent_ch))
+    eps, _ = dit.forward(params, cfg, lat, jnp.array([3]), jnp.array([0]))
+    assert eps.shape == lat.shape
+
+
+def test_unet_smoke():
+    cfg = reduced(get_config("unet-sd15"))
+    params = unet.init(KEY, cfg)
+    lr = cfg.img_res // cfg.latent_factor
+    lat = jax.random.normal(KEY, (2, lr, lr, cfg.latent_ch))
+    ctx = jax.random.normal(KEY, (2, cfg.ctx_len, cfg.ctx_dim))
+
+    def loss(p):
+        def eps_fn(x, t):
+            return unet.forward(p, cfg, x, t, ctx, train=True)
+        return diffusion.train_loss(eps_fn, lat, KEY)
+
+    l, g = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l))
+
+
+@pytest.mark.parametrize("arch", ["targetfuse-space", "targetfuse-ground",
+                                  "ssd-mobilenetv2"])
+def test_detector_smoke(arch):
+    cfg = reduced(get_config(arch))
+    params = detector.init(KEY, cfg)
+    img = jax.random.uniform(KEY, (2, cfg.input_size, cfg.input_size, 3))
+    raw = detector.forward(params, cfg, img)
+    g = detector.grid_size(cfg)
+    assert raw.shape == (2, g, g, cfg.n_anchors, 5 + cfg.n_classes)
+    cnt, conf = detector.count_and_confidence(raw, cfg, input_size=cfg.input_size)
+    assert cnt.shape == (2,) and conf.shape == (2,)
+    assert (np.asarray(conf) >= 0).all() and (np.asarray(conf) <= 1).all()
+
+
+def test_all_full_configs_instantiate_shapes_only():
+    """FULL configs must at least eval_shape-init (no allocation)."""
+    import functools
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        if cfg.family == "lm":
+            sds = jax.eval_shape(functools.partial(lm.init, cfg=cfg), KEY)
+        elif cfg.family == "vision":
+            mod = {"vit": vit, "convnext": convnext, "resnet": resnet}[cfg.kind]
+            sds = jax.eval_shape(functools.partial(mod.init, cfg=cfg), KEY)
+        else:
+            mod = dit if cfg.kind == "dit" else unet
+            sds = jax.eval_shape(functools.partial(mod.init, cfg=cfg), KEY)
+        n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(sds))
+        # within 25% of the config's analytic count (analytic is approximate
+        # for conv nets)
+        assert 0.5 < n / cfg.n_params < 2.0, (arch, n, cfg.n_params)

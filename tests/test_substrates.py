@@ -1,0 +1,233 @@
+"""Optimizer / checkpoint / supervisor / compression / data tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+from repro.optim.adamw import adamw, clip_by_global_norm, global_norm
+from repro.optim.compress import (int8_roundtrip_tree, topk_roundtrip_tree)
+from repro.optim.schedule import cosine_with_warmup
+from repro.runtime.supervisor import (DeadlineBatcher, SimulatedFailure,
+                                      SupervisorConfig, run_training)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    init, update = adamw(0.1)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_adamw_mixed_precision_state():
+    init, update = adamw(1e-3)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = init(params)
+    assert state.mu["w"].dtype == jnp.float32
+    params2, state2, _ = update({"w": jnp.ones((4,), jnp.bfloat16)}, state, params)
+    assert params2["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 10.0)}
+    clipped, n = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_cosine_schedule():
+    f = cosine_with_warmup(1.0, 10, 100)
+    assert float(f(jnp.array(0))) == 0.0
+    assert abs(float(f(jnp.array(10))) - 1.0) < 0.01
+    assert float(f(jnp.array(100))) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_compression_unbiased():
+    g = {"w": jax.random.normal(KEY, (64, 64))}
+    dec = [int8_roundtrip_tree(g, jax.random.PRNGKey(i))["w"] for i in range(64)]
+    mean = jnp.stack(dec).mean(0)
+    rel = float(jnp.linalg.norm(mean - g["w"]) / jnp.linalg.norm(g["w"]))
+    assert rel < 0.05, rel  # stochastic rounding is unbiased
+
+
+def test_topk_error_feedback_recovers():
+    g = {"w": jax.random.normal(KEY, (32, 32))}
+    res = jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), g)
+    acc = jnp.zeros((32, 32))
+    for _ in range(20):  # same grad each round: EF must converge to it
+        dec, res = topk_roundtrip_tree(g, res, frac=0.1)
+        acc += dec["w"] / 20
+    # with error feedback the *accumulated* transmitted grad approaches g
+    rel = float(jnp.linalg.norm(acc - g["w"]) / jnp.linalg.norm(g["w"]))
+    assert rel < 0.2, rel
+
+
+@given(frac=st.floats(0.01, 1.0))
+@settings(max_examples=10, deadline=None)
+def test_topk_sparsity(frac):
+    g = {"w": jax.random.normal(KEY, (100,))}
+    res = {"w": jnp.zeros((100,), jnp.float32)}
+    dec, _ = topk_roundtrip_tree(g, res, frac=frac)
+    nz = int(jnp.sum(dec["w"] != 0))
+    assert nz <= max(1, int(100 * frac))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_ckpt_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3), jnp.bfloat16)},
+            "step": jnp.array(7)}
+    ckpt.save(str(tmp_path), 5, tree)
+    step, restored = ckpt.restore(str(tmp_path), tree)
+    assert step == 5
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_ckpt_latest_and_gc(tmp_path):
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4]
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+
+def test_ckpt_ignores_uncommitted(tmp_path):
+    tree = {"x": jnp.zeros(3)}
+    ckpt.save(str(tmp_path), 1, tree)
+    # fake a torn save: directory without COMMITTED marker
+    os.makedirs(tmp_path / "step_00000009")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_ckpt_async(tmp_path):
+    tree = {"x": jnp.arange(5.0)}
+    t = ckpt.save(str(tmp_path), 3, tree, async_=True)
+    t.join()
+    step, restored = ckpt.restore(str(tmp_path), tree)
+    assert step == 3
+
+
+def test_ckpt_structure_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# supervisor: fault tolerance
+# ---------------------------------------------------------------------------
+
+def _toy_problem():
+    def step_fn(state, batch):
+        params = state
+        new = jax.tree_util.tree_map(lambda p: p * 0.9, params)
+        return new, jnp.sum(new["w"])
+
+    def data_fn(step):
+        return None
+
+    return {"w": jnp.full((2,), 100.0)}, step_fn, data_fn
+
+
+def test_supervisor_checkpoint_restart(tmp_path):
+    state, step_fn, data_fn = _toy_problem()
+    cfg = SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_steps=20,
+                           async_save=False, fail_at_step=12)
+    with pytest.raises(SimulatedFailure):
+        run_training(state, step_fn, data_fn, cfg)
+    # node "restarts": same call, resumes from step 10, completes
+    cfg2 = SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_steps=20,
+                            async_save=False)
+    final, report = run_training(state, step_fn, data_fn, cfg2)
+    assert report.resumed_from == 10
+    assert report.steps_run == 10  # only the remaining steps
+    # final value equals an uninterrupted 20-step run
+    expected = 100.0 * 0.9 ** 20
+    np.testing.assert_allclose(final["w"], expected, rtol=1e-5)
+
+
+def test_supervisor_rejects_nan_steps(tmp_path):
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            return state, jnp.float32(np.nan)
+        return jax.tree_util.tree_map(lambda p: p - 1.0, state), jnp.float32(1.0)
+
+    state = {"w": jnp.zeros(1)}
+    cfg = SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=100, max_steps=5,
+                           async_save=False)
+    final, report = run_training(state, step_fn, lambda s: None, cfg)
+    assert report.rejected_steps == 1
+    np.testing.assert_allclose(final["w"], -4.0)  # 4 good steps applied
+
+
+def test_deadline_batcher_drops_stragglers():
+    clock = {"t": 0.0}
+
+    def fake_clock():
+        return clock["t"]
+
+    def work(item):
+        clock["t"] += 1.0  # each item takes 1s
+        return item * 2
+
+    b = DeadlineBatcher(deadline_s=2.5, clock=fake_clock)
+    results, dropped = b.run([1, 2, 3, 4, 5], work)
+    assert results == [2, 4, 6]
+    assert dropped == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# synthetic data
+# ---------------------------------------------------------------------------
+
+def test_scene_ground_truth_consistency(rng):
+    from repro.data.synthetic import XVIEW_LIKE, make_scene, tile_counts
+    img, boxes, classes = make_scene(rng, XVIEW_LIKE)
+    assert img.shape == (1024, 1024, 3)
+    assert img.min() >= 0 and img.max() <= 1
+    counts = tile_counts(boxes, 1024, 128)
+    assert counts.sum() == len(boxes)
+
+
+def test_revisit_preserves_count(rng):
+    from repro.data.synthetic import UAVOD_LIKE, make_scene, revisit_frames
+    img, boxes, classes = make_scene(rng, UAVOD_LIKE)
+    frames = revisit_frames(rng, img, boxes, classes, 5)
+    assert len(frames) == 5
+    for f, b, c in frames:
+        assert f.shape == img.shape
+        # shifts may drop a few edge boxes but most objects persist
+        assert len(b) >= 0.6 * len(boxes)
+
+
+def test_boxes_to_targets(rng):
+    from repro.data.synthetic import boxes_to_targets
+    boxes = np.array([[10, 10, 30, 30], [50, 50, 60, 64]], np.float32)
+    classes = np.array([0, 3])
+    t = boxes_to_targets(boxes, classes, grid=8, n_anchors=3, n_classes=8,
+                         input_size=64)
+    assert t.shape == (8, 8, 3, 13)
+    assert t[..., 4].sum() == 2  # two positives
+    ys, xs, ans = np.where(t[..., 4] > 0)[:3]
+    assert set(zip(ys.tolist(), xs.tolist())) == {(2, 2), (7, 6)}

@@ -1,0 +1,129 @@
+"""End-to-end behaviour tests for the TargetFuse system (paper claims at
+test scale: mechanics + orderings, not headline magnitudes)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.cascade import count_tiles_batched, fit_counter
+from repro.core.pipeline import PipelineConfig, budgets_for, run_pipeline
+from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
+
+
+@pytest.fixture(scope="module")
+def counters():
+    """Small counters, trained just enough for pipeline mechanics."""
+    spec = SceneSpec("mini", 512, (20, 30), (10, 24), cloud_fraction=0.2)
+    rng = np.random.default_rng(0)
+    scenes = [make_scene(rng, spec) for _ in range(6)]
+    sp_cfg = reduced(get_config("targetfuse-space"))
+    gd_cfg = reduced(get_config("targetfuse-ground"))
+    sp, _ = fit_counter(sp_cfg, scenes, 128, 250, jax.random.PRNGKey(0))
+    gd, _ = fit_counter(gd_cfg, scenes, 128, 600, jax.random.PRNGKey(1))
+    return (sp, sp_cfg), (gd, gd_cfg), spec
+
+
+@pytest.fixture(scope="module")
+def frames(counters):
+    _, _, spec = counters
+    rng = np.random.default_rng(7)
+    out = []
+    for _ in range(2):
+        img, b, c = make_scene(rng, spec)
+        out += revisit_frames(rng, img, b, c, 3)
+    return out
+
+
+def _run(frames, counters, **kw):
+    space, ground, _ = counters
+    pcfg = PipelineConfig(score_thresh=0.25, **kw)
+    return run_pipeline(frames, space, ground, pcfg)
+
+
+def test_ground_tier_more_accurate(counters):
+    """The cascade's premise: deeper ground counter beats space counter."""
+    space, ground, spec = counters
+    rng = np.random.default_rng(3)
+    from repro.core import tiling
+    from repro.data.synthetic import tile_counts
+    import jax.numpy as jnp
+    errs_s, errs_g = [], []
+    for _ in range(3):
+        img, b, c = make_scene(rng, spec)
+        true = tile_counts(b, spec.scene_px, 128)
+        ts = np.asarray(tiling.resize_tiles(
+            tiling.tile_image(jnp.asarray(img), 128), space[1].input_size))
+        tg = np.asarray(tiling.resize_tiles(
+            tiling.tile_image(jnp.asarray(img), 128), ground[1].input_size))
+        cs, _ = count_tiles_batched(*space, ts, score_thresh=0.25)
+        cg, _ = count_tiles_batched(*ground, tg, score_thresh=0.25)
+        errs_s.append(np.abs(cs - true).sum() / max(true.sum(), 1))
+        errs_g.append(np.abs(cg - true).sum() / max(true.sum(), 1))
+    assert np.mean(errs_g) < np.mean(errs_s)
+
+
+def test_targetfuse_beats_space_only(frames, counters):
+    r_tf = _run(frames, counters, method="targetfuse")
+    r_so = _run(frames, counters, method="space_only")
+    assert r_tf.cmae < r_so.cmae
+
+
+def test_targetfuse_beats_tiansuan(frames, counters):
+    r_tf = _run(frames, counters, method="targetfuse")
+    r_ti = _run(frames, counters, method="tiansuan")
+    assert r_tf.cmae <= r_ti.cmae * 1.05
+
+
+def test_targetfuse_tracks_kodan_upper_bound(frames, counters):
+    """Kodan ignores bandwidth -> its CMAE lower-bounds TargetFuse; when
+    bandwidth suffices they coincide (paper Fig. 7/10)."""
+    r_tf = _run(frames, counters, method="targetfuse")
+    r_ko = _run(frames, counters, method="kodan")
+    assert r_ko.cmae <= r_tf.cmae + 1e-9
+
+
+def test_bandwidth_budget_respected(frames, counters):
+    for method in ("targetfuse", "tiansuan", "ground_only"):
+        r = _run(frames, counters, method=method)
+        assert r.bytes_downlinked <= r.bytes_budget + 1e-6, method
+
+
+def test_kodan_is_bandwidth_oblivious(frames, counters):
+    r = _run(frames, counters, method="kodan", bandwidth_mbps=1.0)
+    # with ~no bandwidth, kodan still "downlinks" everything it wants
+    assert r.bytes_downlinked > r.bytes_budget
+
+
+def test_more_bandwidth_never_hurts(frames, counters):
+    cmaes = [
+        _run(frames, counters, method="targetfuse", bandwidth_mbps=bw).cmae
+        for bw in (5, 50, 500)
+    ]
+    assert cmaes[2] <= cmaes[0] + 0.05
+
+
+def test_dedup_reduces_onboard_compute(frames, counters):
+    r_with = _run(frames, counters, method="targetfuse", use_dedup=True)
+    r_without = _run(frames, counters, method="targetfuse", use_dedup=False)
+    assert r_with.tiles_processed_space <= r_without.tiles_processed_space
+
+
+def test_energy_budget_caps_processing(frames, counters):
+    r_lo = _run(frames, counters, method="space_only", energy_budget_j=20_000)
+    r_hi = _run(frames, counters, method="space_only", energy_budget_j=500_000)
+    assert r_lo.tiles_processed_space <= r_hi.tiles_processed_space
+    e, _, _ = budgets_for(PipelineConfig(energy_budget_j=20_000),
+                          r_lo.tiles_total)
+    assert r_lo.energy_spent_j <= e * 1.05
+
+
+def test_rpi4_beats_atlas_per_joule(frames, counters):
+    """Paper Fig. 8/9: the low-power tier processes more tiles within the
+    same energy budget."""
+    from repro.core.energy import ATLAS, RPI4
+    r_rpi = _run(frames, counters, method="space_only", hardware=RPI4,
+                 energy_budget_j=40_000)
+    r_atl = _run(frames, counters, method="space_only", hardware=ATLAS,
+                 energy_budget_j=40_000)
+    assert r_rpi.tiles_processed_space >= r_atl.tiles_processed_space
+    assert r_rpi.cmae <= r_atl.cmae + 1e-9
