@@ -1,19 +1,31 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Select figures with
-``python -m benchmarks.run fig7 fig11`` (all by default).
+``python -m benchmarks.run fig7 fig11`` (all by default). Pass
+``--json PATH`` to also write the rows as a ``name ->
+{us_per_call, derived}`` dict (the ``BENCH_*.json`` trajectory files).
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 FIGS = ("fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-        "kernels")
+        "pipeline", "kernels")
 
 
 def main() -> None:
-    want = [a for a in sys.argv[1:] if not a.startswith("-")] or list(FIGS)
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            sys.exit("--json requires a PATH argument")
+        del argv[i:i + 2]
+    want = [a for a in argv if not a.startswith("-")] or list(FIGS)
     mods = []
     if "fig4" in want:
         from benchmarks import fig4_tilesize as m
@@ -39,20 +51,31 @@ def main() -> None:
     if "fig12" in want:
         from benchmarks import fig12_ablation as m
         mods.append(m)
+    if "pipeline" in want:
+        from benchmarks import pipeline_bench as m
+        mods.append(m)
     if "kernels" in want:
         from benchmarks import kernel_bench as m
         mods.append(m)
 
+    results = {}
     print("name,us_per_call,derived")
     for mod in mods:
         t0 = time.time()
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}", flush=True)
+                results[name] = {"us_per_call": us, "derived": derived}
         except Exception as e:  # keep the harness running for later figs
             print(f"{mod.__name__},0.0,ERROR={e!r}", flush=True)
+            results[mod.__name__] = {"us_per_call": 0.0, "derived": f"ERROR={e!r}"}
         print(f"# {mod.__name__} done in {time.time() - t0:.0f}s",
               file=sys.stderr)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

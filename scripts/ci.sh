@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + kernel micro-bench smoke run.
+#
+# Usage: scripts/ci.sh
+# Perf trajectories land in BENCH_kernels_smoke.json for regression diffing.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== kernel bench smoke =="
+python -m benchmarks.run kernels --json BENCH_kernels_smoke.json

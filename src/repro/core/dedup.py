@@ -6,15 +6,39 @@ requirement that contexts survive 'geographic label transformations'),
 k-means-clustered into geographic contexts, and only the tile nearest
 each centroid is processed/downlinked. Cluster sizes are retained so the
 representative's count stands for the whole context.
+
+The pipeline engine computes tile moments once per frame batch and
+enters through :func:`dedup_from_moments`; :func:`dedup` keeps the
+featurize-from-raw-tiles entry point.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+
+# shape-stable dedup: inputs are zero-padded to power-of-two bucket sizes
+# so the compiled program count grows with log(workload), not workload
+_N_BUCKET = 64
+_K_BUCKET = 16
+_FAR = 1e15  # sentinel for unused centroid slots (d2 stays finite in f32)
+
+
+def bucket_size(v: int, floor: int = _N_BUCKET) -> int:
+    """Next power-of-two bucket >= max(v, floor) for shape-stable padding."""
+    b = floor
+    while b < v:
+        b *= 2
+    return b
+
+
+def dedup_pad_size(n: int) -> int:
+    """Input bucket `dedup_from_moments` expects for a pre-padded gather."""
+    return bucket_size(n, 2 * _N_BUCKET)
 
 
 class DedupResult(NamedTuple):
@@ -25,21 +49,55 @@ class DedupResult(NamedTuple):
     rep_idx: jnp.ndarray       # (K,) int32 index of each cluster's representative
 
 
-def features(tiles: jnp.ndarray) -> jnp.ndarray:
-    """(N, H, W, C) -> (N, 3C) color-moment features.
+def normalize_moments(f: jnp.ndarray) -> jnp.ndarray:
+    """(N, D) raw color moments -> centered features.
 
     Centered per feature but scaled by one GLOBAL factor: per-feature
     z-scoring would blow up low-information dimensions (e.g. nearly
     constant tile stds) into pure noise axes and break the clustering.
     """
-    f = kops.tile_moments(tiles)
     mu = jnp.mean(f, 0, keepdims=True)
     scale = jnp.std(f) + 1e-6
     return (f - mu) / scale
 
 
+def features(tiles: jnp.ndarray) -> jnp.ndarray:
+    """(N, H, W, C) -> (N, 3C) normalized color-moment features."""
+    return normalize_moments(kops.tile_moments(tiles))
+
+
 def _kmeanspp_init(x, k, key):
-    """k-means++ (greedy D² farthest-point) initialization."""
+    """k-means++ (greedy D² farthest-point) initialization, incremental.
+
+    Maintains a running min-d² vector updated against only the newest
+    centroid: O(N·D) per pick instead of re-scoring all K centroids
+    (O(N·K·D)) on every scan step like `_kmeanspp_init_scan`.
+    """
+    n = x.shape[0]
+    first = jax.random.randint(key, (), 0, n)
+    cent0 = x[first]
+    _, d2 = kops.kmeans_assign(x, cent0[None])
+
+    def pick(carry, i):
+        cents, d2 = carry
+        nxt = jnp.argmax(d2)  # greedy farthest point (deterministic)
+        c = x[nxt]
+        cents = jax.lax.dynamic_update_slice(cents, c[None], (i, 0))
+        _, d2_new = kops.kmeans_assign(x, c[None])
+        return (cents, jnp.minimum(d2, d2_new)), None
+
+    cents = jnp.tile(cent0[None], (k, 1))
+    (cents, _), _ = jax.lax.scan(pick, (cents, d2), jnp.arange(1, k))
+    return cents
+
+
+def _kmeanspp_init_scan(x, k, key):
+    """Pre-engine init: full kmeans_assign against all K slots per pick.
+
+    Kept as the equivalence reference for `_kmeanspp_init` (the unfilled
+    slots duplicate centroid 0, so the min-distance — and therefore the
+    pick sequence — is identical).
+    """
     n = x.shape[0]
     first = jax.random.randint(key, (), 0, n)
     cent0 = x[first]
@@ -47,7 +105,7 @@ def _kmeanspp_init(x, k, key):
     def pick(carry, key_i):
         cents, i = carry
         _, d2 = kops.kmeans_assign(x, cents)
-        nxt = jnp.argmax(d2)  # greedy farthest point (deterministic)
+        nxt = jnp.argmax(d2)
         cents = jax.lax.dynamic_update_slice(cents, x[nxt][None], (i, 0))
         return (cents, i + 1), None
 
@@ -75,21 +133,114 @@ def kmeans(x: jnp.ndarray, k: int, key, iters: int = 10):
 
 def dedup(tiles: jnp.ndarray, k: int, key, iters: int = 10) -> DedupResult:
     """Full dedup pass: featurize -> cluster -> pick representatives."""
-    f = features(tiles)
-    assign, cent, d2 = kmeans(f, k, key, iters)
-    n = f.shape[0]
-    # representative = argmin distance within each cluster
+    return dedup_from_moments(kops.tile_moments(tiles), k, key, iters)
+
+
+@partial(jax.jit, static_argnames=("k_pad", "iters"))
+def _dedup_padded_core(m_pad, n, k, key, *, k_pad: int, iters: int):
+    """Shape-stable featurize + k-means over padded raw moments.
+
+    ``m_pad`` is (n_pad, D) with real rows [:n]; rows past ``n`` may
+    hold ANY finite values (zero padding or junk from a padded gather) —
+    the first masked `where` zeroes them, after which every path is a
+    pure function of the real rows. ``n`` and ``k`` are dynamic scalars,
+    so ONE compilation per (n_pad, k_pad) bucket serves every workload
+    size — successive orbital passes of different sizes stop triggering
+    fresh XLA compiles of the clustering scans. Pad rows carry weight 0
+    in every centroid update and never win the farthest-point argmax;
+    unused centroid slots sit at a far sentinel no point can select, so
+    real clusters evolve exactly as if the pads were absent.
+    """
+    n_pad, d = m_pad.shape
+    mask = jnp.arange(n_pad) < n
+    maskc = mask[:, None]
+    nf = n.astype(jnp.float32)
+
+    # masked normalize_moments (same two-pass mean / global-std formula)
+    m0 = jnp.where(maskc, m_pad, 0.0)
+    mu = jnp.sum(m0, 0, keepdims=True) / nf
+    gmu = jnp.sum(m0) / (nf * d)
+    var = jnp.sum(jnp.where(maskc, jnp.square(m_pad - gmu), 0.0)) / (nf * d)
+    scale = jnp.sqrt(var) + 1e-6
+    x = jnp.where(maskc, (m_pad - mu) / scale, 0.0)
+
+    # --- incremental k-means++ init (O(N·D) per pick), masked ---
+    first = jax.random.randint(key, (), 0, n)
+    cent0 = x[first]
+    _, d2 = kops.kmeans_assign(x, cent0[None])
+    far = jnp.full((d,), jnp.float32(_FAR), x.dtype)
+
+    def pick(carry, i):
+        cents, d2 = carry
+        nxt = jnp.argmax(jnp.where(mask, d2, -jnp.inf))
+        c = jnp.where(i < k, x[nxt], far)
+        cents = jax.lax.dynamic_update_slice(cents, c[None], (i, 0))
+        _, d2n = kops.kmeans_assign(x, c[None])
+        d2 = jnp.where(i < k, jnp.minimum(d2, d2n), d2)
+        return (cents, d2), None
+
+    cents = jnp.tile(cent0[None], (k_pad, 1))
+    (cents, _), _ = jax.lax.scan(pick, (cents, d2), jnp.arange(1, k_pad))
+
+    # --- Lloyd iterations, masked ---
+    def step(cent, _):
+        assign, _ = kops.kmeans_assign(x, cent)
+        one = jax.nn.one_hot(assign, k_pad, dtype=x.dtype) * maskc
+        tot = jnp.einsum("nk,nd->kd", one, x)
+        cnt = jnp.sum(one, 0)[:, None]
+        new = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cents, None, length=iters)
+    return x, cent
+
+
+def dedup_from_moments(moments: jnp.ndarray, k: int, key, iters: int = 10,
+                       n: int = None) -> DedupResult:
+    """Dedup pass over raw color moments: featurize -> cluster -> reps.
+
+    The canonical clustering path — the engine AND the reference host
+    path both enter here, so identical real rows yield bit-identical
+    results. ``moments`` is (N, 3C); pass ``n`` when the trailing rows
+    are padding from an already-bucketed gather (their values are
+    ignored). Everything runs on power-of-two padded shapes: one
+    compiled program per size bucket serves every workload.
+    """
+    n = int(moments.shape[0]) if n is None else int(n)
+    d = int(moments.shape[1])
+    # floored at 2x the base bucket so small passes share the compiled
+    # core with mid-size ones (the masked arithmetic is size-agnostic)
+    n_pad = dedup_pad_size(n)
+    # tie k's bucket to n's so one compiled core serves each size bucket
+    # (k <= n/2 in every pipeline call; bucket up for odd explicit k)
+    k_pad = (n_pad // 2 if int(k) <= n_pad // 2
+             else bucket_size(int(k), _K_BUCKET))
+    nj = jnp.int32(n)
+    if int(moments.shape[0]) == n_pad:
+        m_pad = jnp.asarray(moments)
+    else:
+        m_pad = jnp.zeros((n_pad, d), jnp.float32).at[:n].set(moments[:n])
+    x_pad, cent = _dedup_padded_core(m_pad, nj, jnp.int32(k), key,
+                                     k_pad=k_pad, iters=iters)
+
+    # final assignment + representatives, eager on bucketed shapes
+    # (nj stays an operand so these cached programs serve every n)
+    assign, d2 = kops.kmeans_assign(x_pad, cent)
+    mask = jnp.arange(n_pad) < nj
     big = jnp.float32(1e30)
-    per_cluster = jnp.full((k,), big).at[assign].min(d2)
-    is_min = d2 <= per_cluster[assign] + 0.0
-    # break ties: lowest index wins
-    idx = jnp.arange(n)
-    cand = jnp.where(is_min, idx, n)
-    rep_idx = jnp.full((k,), n, jnp.int32).at[assign].min(
-        jnp.where(is_min, idx, n).astype(jnp.int32))
-    rep_mask = jnp.zeros((n,), bool).at[jnp.clip(rep_idx, 0, n - 1)].set(rep_idx < n)
-    sizes = jnp.zeros((k,), jnp.int32).at[assign].add(1)
-    return DedupResult(assign, cent, rep_mask, sizes, jnp.clip(rep_idx, 0, n - 1))
+    d2m = jnp.where(mask, d2, big)
+    per_cluster = jnp.full((k_pad,), big).at[assign].min(d2m)
+    is_min = d2m <= per_cluster[assign] + 0.0
+    idxs = jnp.arange(n_pad)
+    rep_idx = jnp.full((k_pad,), n_pad, jnp.int32).at[assign].min(
+        jnp.where(is_min & mask, idxs, n_pad).astype(jnp.int32))
+    rep_found = rep_idx < nj
+    rep_clip = jnp.clip(rep_idx, 0, nj - 1)
+    # scatter-max: duplicate empty-cluster writes can't clobber a real rep
+    rep_mask = jnp.zeros((n_pad,), bool).at[rep_clip].max(rep_found)
+    sizes = jnp.zeros((k_pad,), jnp.int32).at[assign].add(mask.astype(jnp.int32))
+    return DedupResult(assign[:n], cent[:k], rep_mask[:n], sizes[:k],
+                       rep_clip[:k])
 
 
 def expanded_counts(rep_counts: jnp.ndarray, res: DedupResult) -> jnp.ndarray:

@@ -5,6 +5,12 @@ under the energy budget -> two-threshold selection + bandwidth-aware
 throttling -> ground recount of downlinked tiles -> aggregate counts.
 CMAE is computed against the generator's exact per-tile ground truth.
 
+Stages 0-2 run through the device-resident engine
+(:mod:`repro.core.engine`): fused tile/resize/moments programs,
+moments reused for ROI + dedup, fixed-shape counting batches.
+``PipelineConfig(use_engine=False)`` selects the original
+host-orchestrated path, kept as the parity/benchmark reference.
+
 Budget model (calibrated to the paper's published satellite numbers):
 the simulated tile set stands for a ``day_fraction`` = n_tiles /
 ``tiles_per_day`` slice of one operational day. The energy budget
@@ -38,8 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.dedup as dd
-from repro.core import tiling
-from repro.core.cascade import count_tiles_batched
+from repro.core import engine, tiling
+from repro.core.cascade import count_tiles_batched, count_tiles_batched_ref
 from repro.core.energy import (DeviceProfile, EnergyLedger, RPI4,
                                detector_gflops, max_tiles_within_budget)
 from repro.core.metrics import cmae
@@ -68,6 +74,8 @@ class PipelineConfig:
     tiles_per_day: float = 100_000.0
     real_tile_px: int = 416              # byte/energy pricing scale
     seed: int = 0
+    # device-resident engine (False = seed host-orchestrated reference path)
+    use_engine: bool = True
 
 
 @dataclass
@@ -118,16 +126,33 @@ def run_pipeline(frames, space, ground, pcfg: PipelineConfig,
     gfl_sp = detector_gflops(energy_cfgs[0])
 
     # ---- stage 0: tile every frame, collect ground truth ----
-    all_tiles_sp, all_tiles_gd, all_true = [], [], []
-    for img, boxes, classes in frames:
-        s = img.shape[0]
-        all_true.append(tile_counts(boxes, s, pcfg.tile_size))
-        all_tiles_sp.append(_prep_tiles(img, pcfg.tile_size, sp_cfg.input_size))
-        all_tiles_gd.append(_prep_tiles(img, pcfg.tile_size, gd_cfg.input_size))
-    tiles_sp = np.concatenate(all_tiles_sp)
-    tiles_gd = np.concatenate(all_tiles_gd)
-    true = np.concatenate(all_true).astype(np.float64)
-    n = tiles_sp.shape[0]
+    if pcfg.use_engine:
+        # fused device-resident frame program (tile + resize both tiers +
+        # moments, once); tiles stay on device for the counting stages
+        prep = engine.prepare_frames(frames, pcfg.tile_size,
+                                     sp_cfg.input_size, gd_cfg.input_size)
+        tiles_sp, tiles_gd, true, n = prep.tiles_sp, prep.tiles_gd, prep.true, prep.n
+    else:
+        prep = None
+        all_tiles_sp, all_tiles_gd, all_true = [], [], []
+        for img, boxes, classes in frames:
+            s = img.shape[0]
+            all_true.append(tile_counts(boxes, s, pcfg.tile_size))
+            all_tiles_sp.append(_prep_tiles(img, pcfg.tile_size, sp_cfg.input_size))
+            all_tiles_gd.append(_prep_tiles(img, pcfg.tile_size, gd_cfg.input_size))
+        tiles_sp = np.concatenate(all_tiles_sp)
+        tiles_gd = np.concatenate(all_tiles_gd)
+        true = np.concatenate(all_true).astype(np.float64)
+        n = tiles_sp.shape[0]
+
+    def count_sel(params, cfg, tiles, sel):
+        """Count tiles[sel]: device gather + fixed-shape batches on the
+        engine path, host slice + seed batching on the reference path."""
+        if pcfg.use_engine:
+            return count_tiles_batched(params, cfg, tiles, idx=sel,
+                                       score_thresh=pcfg.score_thresh)
+        return count_tiles_batched_ref(params, cfg, tiles[sel],
+                                       score_thresh=pcfg.score_thresh)
 
     energy_j, budget_bytes, tile_bytes = budgets_for(pcfg, n)
     ledger = EnergyLedger(budget_j=energy_j)
@@ -141,8 +166,7 @@ def run_pipeline(frames, space, ground, pcfg: PipelineConfig,
         k = int(budget_bytes // tile_bytes)
         sel = np.arange(min(k, n))
         if len(sel):
-            c, _ = count_tiles_batched(gd_params, gd_cfg, tiles_gd[sel],
-                                       score_thresh=pcfg.score_thresh)
+            c, _ = count_sel(gd_params, gd_cfg, tiles_gd, sel)
             pred[sel] = c
         bytes_down = len(sel) * tile_bytes
         ledger.charge_downlink(bytes_down, pcfg.bandwidth_mbps)
@@ -151,7 +175,11 @@ def run_pipeline(frames, space, ground, pcfg: PipelineConfig,
     # ---- ROI filter (low-variance tiles are background/cloud) ----
     active = np.ones(n, bool)
     if pcfg.use_roi and pcfg.method in ("kodan", "targetfuse"):
-        raw_sd = np.asarray(jnp.mean(jnp.std(jnp.asarray(tiles_sp), axis=(1, 2)), axis=-1))
+        if prep is not None:
+            raw_sd = prep.roi_std  # stddev moment from the fused program
+        else:
+            raw_sd = np.asarray(jnp.mean(jnp.std(jnp.asarray(tiles_sp),
+                                                 axis=(1, 2)), axis=-1))
         active &= raw_sd > pcfg.roi_std_thresh
 
     # ---- dedup ----
@@ -159,8 +187,18 @@ def run_pipeline(frames, space, ground, pcfg: PipelineConfig,
     if pcfg.use_dedup and pcfg.method in ("kodan", "targetfuse") and active.sum() > 4:
         k = pcfg.k_clusters or max(2, int(active.sum()) // 2)
         idx_active = np.where(active)[0]
-        res = dd.dedup(jnp.asarray(tiles_sp[idx_active]), k,
-                       jax.random.PRNGKey(pcfg.seed))
+        if prep is not None:
+            # bucketed gather of the fused program's moments: pad the index
+            # vector so the gather (and the whole dedup) is shape-stable
+            n_act = len(idx_active)
+            idx_pad = np.zeros(dd.dedup_pad_size(n_act), np.int64)
+            idx_pad[:n_act] = idx_active
+            res = dd.dedup_from_moments(prep.moments[jnp.asarray(idx_pad)], k,
+                                        jax.random.PRNGKey(pcfg.seed),
+                                        n=n_act)
+        else:
+            res = dd.dedup(jnp.asarray(tiles_sp[idx_active]), k,
+                           jax.random.PRNGKey(pcfg.seed))
         assign = np.asarray(res.assign)
         rep_local = np.asarray(res.rep_idx)
         rep_of[idx_active] = idx_active[rep_local[assign]]
@@ -177,8 +215,7 @@ def run_pipeline(frames, space, ground, pcfg: PipelineConfig,
     counts_sp = np.zeros(n)
     conf = np.full(n, -1.0)
     if n_processed:
-        c, f = count_tiles_batched(sp_params, sp_cfg, tiles_sp[process],
-                                   score_thresh=pcfg.score_thresh)
+        c, f = count_sel(sp_params, sp_cfg, tiles_sp, process)
         counts_sp[process] = c
         conf[process] = f
     counts_sp = counts_sp[rep_of]
@@ -199,8 +236,7 @@ def run_pipeline(frames, space, ground, pcfg: PipelineConfig,
         k = int(budget_bytes // tile_bytes)
         sel_reps = cand_reps[:k]
         if len(sel_reps):
-            c, _ = count_tiles_batched(gd_params, gd_cfg, tiles_gd[sel_reps],
-                                       score_thresh=pcfg.score_thresh)
+            c, _ = count_sel(gd_params, gd_cfg, tiles_gd, sel_reps)
             counts_gd = np.zeros(n)
             counts_gd[sel_reps] = c
             got = np.isin(rep_of, sel_reps) & processed_mask & ~accept
@@ -215,11 +251,27 @@ def run_pipeline(frames, space, ground, pcfg: PipelineConfig,
     rep_idx = np.where(rep_mask)[0]
     kodan = pcfg.method == "kodan"
     budget = np.float64(1e18) if kodan else np.float64(budget_bytes)
-    tr = throttle(jnp.asarray(conf[rep_idx]),
-                  jnp.full(len(rep_idx), tile_bytes),
-                  budget, pcfg.conf_p, pcfg.conf_q, pcfg.policy)
-    space_m = np.asarray(tr.space)
-    down_m = np.asarray(tr.downlink)
+    n_rep = len(rep_idx)
+    if pcfg.use_engine:
+        # shape-stable: pad the rep set to a bucket; pad slots are
+        # active=False so they sort last and take no budget (masks over
+        # the real slots are bit-identical to the unpadded call)
+        n_pad = dd.bucket_size(max(n_rep, 1))
+        conf_pad = np.full(n_pad, -1.0)
+        conf_pad[:n_rep] = conf[rep_idx]
+        act = np.zeros(n_pad, bool)
+        act[:n_rep] = True
+        tr = throttle(jnp.asarray(conf_pad), jnp.full(n_pad, tile_bytes),
+                      budget, pcfg.conf_p, pcfg.conf_q, pcfg.policy,
+                      active=jnp.asarray(act))
+        space_m = np.asarray(tr.space)[:n_rep]
+        down_m = np.asarray(tr.downlink)[:n_rep]
+    else:
+        tr = throttle(jnp.asarray(conf[rep_idx]),
+                      jnp.full(n_rep, tile_bytes),
+                      budget, pcfg.conf_p, pcfg.conf_q, pcfg.policy)
+        space_m = np.asarray(tr.space)
+        down_m = np.asarray(tr.downlink)
     down_reps = rep_idx[down_m]
 
     # leftover bandwidth: raw-downlink representatives the energy budget
@@ -234,8 +286,7 @@ def run_pipeline(frames, space, ground, pcfg: PipelineConfig,
 
     counts_gd = np.zeros(n)
     if len(down_all):
-        c, _ = count_tiles_batched(gd_params, gd_cfg, tiles_gd[down_all],
-                                   score_thresh=pcfg.score_thresh)
+        c, _ = count_sel(gd_params, gd_cfg, tiles_gd, down_all)
         counts_gd[down_all] = c
     counts_gd = counts_gd[rep_of]
 

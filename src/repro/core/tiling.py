@@ -23,7 +23,7 @@ def tile_image(img: jnp.ndarray, tile_size: int) -> jnp.ndarray:
     return t.reshape(gh * gw, tile_size, tile_size, c)
 
 
-def untile_counts(counts: jnp.ndarray, img_hw: Tuple[int, int], tile_size: int):
+def untile_counts(counts: jnp.ndarray):
     """Aggregate per-tile counts back to a per-frame total."""
     return jnp.sum(counts)
 

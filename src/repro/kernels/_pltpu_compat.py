@@ -1,0 +1,5 @@
+"""Version compatibility for the Pallas TPU namespace."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

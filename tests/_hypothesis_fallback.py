@@ -1,0 +1,48 @@
+"""Minimal stand-in for `hypothesis` so the suite still collects when it
+isn't installed: property tests skip cleanly, everything else runs.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    # NB: the zero-arg replacement must NOT carry the original signature
+    # (no functools.wraps) or pytest would try to resolve the property
+    # arguments as fixtures and error at setup instead of skipping.
+    def deco(fn):
+        def skipper():
+            pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        return skipper
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+class _Strategy:
+    """Chainable no-op standing in for any strategy expression."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        return _Strategy()
+
+
+strategies = _Strategies()
