@@ -11,7 +11,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.mission import Mission
+from repro.core.pipeline import PipelineConfig
 from repro.data.synthetic import DATASETS, SceneSpec, make_scene, revisit_frames
 
 MINI = SceneSpec("mini", 512, (20, 30), (10, 24), cloud_fraction=0.2)
@@ -63,9 +64,10 @@ def time_us(fn, *args, warmup=1, iters=3):
 
 
 def run_method(frames, method, **kw):
+    """One-window Mission run of a registered selection policy."""
     space, ground = counters()
     pcfg = PipelineConfig(method=method, score_thresh=0.25, **kw)
-    return run_pipeline(frames, space, ground, pcfg)
+    return Mission(space, ground, pcfg).run(frames)
 
 
 _thresholds = {}

@@ -12,7 +12,8 @@ import numpy as np
 from benchmarks.common import MINI, counters, frames_for
 from repro.configs import get_config, reduced
 from repro.core.cascade import fit_counter
-from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.mission import Mission
+from repro.core.pipeline import PipelineConfig
 from repro.data.synthetic import make_scene
 
 _cache = {}
@@ -37,6 +38,7 @@ def run():
         for method in ("targetfuse", "kodan", "space_only"):
             pcfg = PipelineConfig(method=method, score_thresh=0.25,
                                   bandwidth_mbps=50.0)
-            r = run_pipeline(frames, space, ground, pcfg)
-            rows.append((f"fig10_{arch}_{method}", 0.0, f"cmae={r.cmae:.3f}"))
+            r = Mission(space, ground, pcfg).run(frames)
+            rows.append((f"fig10_{arch}_{method}", 0.0,
+                         f"cmae={r.summary()['cmae']:.3f}"))
     return rows

@@ -46,7 +46,8 @@ def _child(use_engine: bool) -> None:
     import numpy as np
 
     from benchmarks.common import BENCH_DATASETS, counters, frames_for
-    from repro.core.pipeline import PipelineConfig, run_pipeline
+    from repro.core.mission import Mission
+    from repro.core.pipeline import PipelineConfig
 
     space, ground = counters()
     out = {"sweep": {}, "passes": {}}
@@ -57,7 +58,7 @@ def _child(use_engine: bool) -> None:
             pcfg = PipelineConfig(method=m, score_thresh=0.25,
                                   use_engine=use_engine, **UNLIMITED)
             t0 = time.perf_counter()
-            r = run_pipeline(frames, space, ground, pcfg)
+            r = Mission(space, ground, pcfg).run(frames)
             dt = time.perf_counter() - t0
             out["sweep"][f"{name}_{m}"] = {
                 "s": dt,
@@ -73,7 +74,7 @@ def _child(use_engine: bool) -> None:
             pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25,
                                   use_engine=use_engine, **UNLIMITED)
             t0 = time.perf_counter()
-            r = run_pipeline(frames, space, ground, pcfg)
+            r = Mission(space, ground, pcfg).run(frames)
             dt = time.perf_counter() - t0
             out["passes"][f"{name}_pass{i}"] = {
                 "s": dt,

@@ -1,8 +1,11 @@
-"""Multi-satellite constellation simulation: N satellites share ground
-stations; each runs the TargetFuse pipeline over its own ground track;
-contact windows rotate (only one satellite downlinks per window).
+"""Multi-satellite constellation simulation on the streaming Mission API:
+N satellites each own a persistent Mission (energy + byte ledgers carry
+across orbital passes); ground-station contact windows rotate — one
+satellite downlinks per window while the others keep ingesting, so
+un-downlinked passes wait in the satellite's queue until its next
+contact.
 
-  PYTHONPATH=src python examples/constellation_sim.py --sats 4
+  PYTHONPATH=src python examples/constellation_sim.py --sats 4 --windows 2
 """
 import argparse
 import os
@@ -12,7 +15,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.mission import Mission
+from repro.core.pipeline import PipelineConfig
+from repro.core.throttle import contact_budget_bytes
 from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
 from repro.launch.serve import get_counters
 
@@ -20,34 +25,60 @@ from repro.launch.serve import get_counters
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sats", type=int, default=4)
-    ap.add_argument("--windows", type=int, default=2)
+    ap.add_argument("--windows", type=int, default=2,
+                    help="contact windows per satellite")
+    ap.add_argument("--bandwidth", type=float, default=50.0)
     args = ap.parse_args()
 
     space, ground = get_counters()
     spec = SceneSpec("track", 512, (16, 28), (10, 24), cloud_fraction=0.3)
+    n_rounds = args.sats * args.windows
 
     print(f"== {args.sats}-satellite constellation, "
           f"{args.windows} contact windows each ==")
-    agg_pred = agg_true = agg_bytes = 0.0
-    for s in range(args.sats):
-        rng = np.random.default_rng(100 + s)
-        img, b, c = make_scene(rng, spec)
-        frames = revisit_frames(rng, img, b, c, 2)
-        # contact share: each sat gets 1/sats of the window budget
-        pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25,
-                              contacts_per_day=4.0 * args.windows / args.sats,
-                              seed=s)
-        r = run_pipeline(frames, space, ground, pcfg)
+    missions = [
+        Mission(space, ground,
+                PipelineConfig(method="targetfuse", score_thresh=0.25,
+                               bandwidth_mbps=args.bandwidth, seed=s))
+        for s in range(args.sats)
+    ]
+    rngs = [np.random.default_rng(100 + s) for s in range(args.sats)]
+    # each round: every satellite flies one pass; ONE rotates into contact
+    window_bytes = contact_budget_bytes(args.bandwidth, 360.0) / n_rounds
+    for w in range(n_rounds):
+        for s, m in enumerate(missions):
+            img, b, c = make_scene(rngs[s], spec)
+            m.ingest(revisit_frames(rngs[s], img, b, c, 2))
+        sat = w % args.sats
+        rep = missions[sat].contact_window(window_bytes)
+        print(f"  window {w}: sat{sat} drained {rep.segments} passes, "
+              f"downlinked {rep.tiles_downlinked} tiles "
+              f"({rep.bytes_spent / 1e6:.2f} MB of "
+              f"{rep.budget_bytes / 1e6:.2f} MB)")
+
+    agg_pred = agg_true = agg_bytes = agg_budget = 0.0
+    for s, m in enumerate(missions):
+        r = m.finalize()  # passes with no remaining contact: onboard-only
         agg_pred += r.total_pred
         agg_true += r.total_true
-        agg_bytes += r.bytes_downlinked
+        agg_bytes += m.bytes_spent  # per-window-capped actual spend
+        agg_budget += r.bytes_budget
         print(f"  sat{s}: CMAE={r.cmae:.3f} "
               f"proc={r.tiles_processed_space}/{r.tiles_total} "
-              f"down={r.tiles_downlinked} bytes={r.bytes_downlinked / 1e6:.2f}MB")
+              f"down={r.tiles_downlinked} "
+              f"energy={r.energy_spent_j:.1f}/{r.energy_budget_j:.1f}J "
+              f"bytes={r.bytes_downlinked / 1e6:.2f}MB")
+        # budget consistency: the onboard energy classes the cap governs
+        # (capture/compute/aggregate) never overdraw the granted harvest
+        led = m.ledger
+        assert led.e_cap + led.e_com + led.e_agg <= led.budget_j + 1e-6, \
+            "onboard energy overdraw"
+    assert agg_bytes <= agg_budget + 1e-6, "byte overdraw"
     print(f"constellation aggregate count: pred={agg_pred:.0f} "
           f"true={agg_true:.0f} "
           f"rel err={abs(agg_pred - agg_true) / max(agg_true, 1):.3f}, "
-          f"total downlink {agg_bytes / 1e6:.1f} MB")
+          f"downlink {agg_bytes / 1e6:.1f} MB within "
+          f"{agg_budget / 1e6:.1f} MB of windows")
 
 
 if __name__ == "__main__":

@@ -1,78 +1,60 @@
-"""Quickstart: the TargetFuse pipeline on one synthetic EO frame.
+"""Quickstart: the TargetFuse pipeline on one synthetic EO scene via the
+Mission API.
 
   PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper's Fig. 3 workflow end to end with the public API:
-tile -> color-moment features -> k-means dedup -> onboard counting ->
-two-threshold selection -> bandwidth-aware throttling -> ground recount
--> aggregated counts + CMAE.
+A Mission executes the paper's Fig. 3 workflow as an explicit stage
+graph — ingest(frames) runs Capture -> RoiFilter -> Dedup ->
+OnboardCount under the energy budget; contact_window() runs Select ->
+Downlink -> GroundRecount -> Aggregate under the byte budget — with the
+five baselines available as registered selection policies.
 """
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tiling
-from repro.core.dedup import dedup
-from repro.core.throttle import contact_budget_bytes, throttle
-from repro.core.cascade import count_tiles_batched
-from repro.core.metrics import cmae
-from repro.data.synthetic import SceneSpec, make_scene, tile_counts
+from repro.core.mission import Mission
+from repro.core.pipeline import PipelineConfig
+from repro.core.policies import available_policies
+from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
 from repro.launch.serve import get_counters
 
 
 def main():
-    print("== TargetFuse quickstart ==")
+    print("== TargetFuse quickstart (Mission API) ==")
     spec = SceneSpec("demo", 512, (24, 32), (10, 24), cloud_fraction=0.2)
     rng = np.random.default_rng(42)
     img, boxes, classes = make_scene(rng, spec)
-    true = tile_counts(boxes, spec.scene_px, 128)
+    frames = revisit_frames(rng, img, boxes, classes, 2)
     print(f"scene: {img.shape}, {len(boxes)} objects, "
-          f"{(spec.scene_px // 128) ** 2} tiles")
+          f"{(spec.scene_px // 128) ** 2} tiles x {len(frames)} revisits")
+    print(f"registered selection policies: {', '.join(available_policies())}")
 
-    (sp_params, sp_cfg), (gd_params, gd_cfg) = get_counters()
+    space, ground = get_counters()
 
-    # 1) adaptive tiling
-    tiles = tiling.tile_image(jnp.asarray(img), 128)
-    tiles_sp = tiling.resize_tiles(tiles, sp_cfg.input_size)
-    tiles_gd = tiling.resize_tiles(tiles, gd_cfg.input_size)
+    # full system, streamed: onboard stages at ingest, ground stages at
+    # the contact window
+    mission = Mission(space, ground,
+                      PipelineConfig(method="targetfuse", score_thresh=0.25))
+    ing = mission.ingest(frames)
+    print(f"ingest: {ing.n_tiles} tiles, {ing.tiles_processed_space} counted "
+          f"onboard within {ing.energy_granted_j:.1f} J")
+    win = mission.contact_window()
+    print(f"contact window: {win.tiles_downlinked} tiles downlinked "
+          f"({win.bytes_spent / 1e6:.2f} MB of {win.budget_bytes / 1e6:.2f} MB)")
+    r = mission.result()
+    print(f"counts: true={r.total_true:.0f} pred={r.total_pred:.0f} "
+          f"CMAE={r.cmae:.3f}")
 
-    # 2) clustering-based dedup
-    res = dedup(tiles_sp, k=8, key=jax.random.PRNGKey(0))
-    print(f"dedup: {int(res.rep_mask.sum())} representatives / {len(tiles)} tiles")
-
-    # 3) onboard counting (space tier)
-    counts_sp, conf = count_tiles_batched(sp_params, sp_cfg,
-                                          np.asarray(tiles_sp), score_thresh=0.25)
-
-    # 4) bandwidth-aware throttling (Algorithm 2)
-    budget = contact_budget_bytes(50.0, 6.0)  # 50 Mbps x 6 s slice
-    sizes = jnp.full(len(tiles), 128.0 * 128 * 3)
-    tr = throttle(jnp.asarray(conf), sizes, budget, 0.10, 0.80, "dynamic_conf")
-    print(f"throttle: {int(tr.space.sum())} counted in space, "
-          f"{int(tr.downlink.sum())} downlinked, {int(tr.discard.sum())} discarded "
-          f"({float(tr.bytes_used) / 1e6:.2f} MB of {budget / 1e6:.2f} MB)")
-
-    # 5) ground recount of downlinked tiles
-    down = np.where(np.asarray(tr.downlink))[0]
-    counts_gd = np.zeros(len(tiles))
-    if len(down):
-        c, _ = count_tiles_batched(gd_params, gd_cfg, np.asarray(tiles_gd)[down],
-                                   score_thresh=0.25)
-        counts_gd[down] = c
-
-    # 6) aggregate
-    pred = np.where(np.asarray(tr.downlink), counts_gd,
-                    np.where(np.asarray(tr.space), counts_sp, 0.0))
-    print(f"counts: true={true.sum()} pred={pred.sum():.0f} "
-          f"CMAE={cmae(pred, true):.3f}")
-    space_only = cmae(counts_sp, true)
-    print(f"vs space-only CMAE={space_only:.3f} "
-          f"({space_only / max(cmae(pred, true), 1e-9):.1f}x better)")
+    # same frames through the space-only policy for comparison
+    so = Mission(space, ground,
+                 PipelineConfig(method="space_only",
+                                score_thresh=0.25)).run(frames)
+    print(f"vs space-only CMAE={so.cmae:.3f} "
+          f"({so.cmae / max(r.cmae, 1e-9):.1f}x better)")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.mission import Mission
+from repro.core.pipeline import PipelineConfig
 from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
 from repro.launch.serve import get_counters
 from repro.runtime.supervisor import DeadlineBatcher
@@ -30,31 +31,35 @@ def main():
     rng = np.random.default_rng(7)
     spec = SceneSpec("orbit", 512, (20, 30), (10, 24), cloud_fraction=0.25)
 
-    total_pred = total_true = 0.0
     batcher = DeadlineBatcher(deadline_s=args.deadline_s)
+    # ONE persistent Mission: energy/byte ledgers carry across passes
+    mission = Mission(space, ground,
+                      PipelineConfig(method="targetfuse", score_thresh=0.25,
+                                     bandwidth_mbps=args.bandwidth))
 
     def one_pass(i):
         img, b, c = make_scene(rng, spec)
         frames = revisit_frames(rng, img, b, c, 2)
-        pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25,
-                              bandwidth_mbps=args.bandwidth, seed=i)
-        r = run_pipeline(frames, space, ground, pcfg)
-        print(f"  pass {i}: CMAE={r.cmae:.3f} pred={r.total_pred:.0f} "
-              f"true={r.total_true:.0f} downlinked={r.tiles_downlinked} "
-              f"energy={r.energy_spent_j:.1f}J "
-              f"bytes={r.bytes_downlinked / 1e6:.2f}MB")
-        return r
+        ing = mission.ingest(frames)
+        win = mission.contact_window()
+        print(f"  pass {i}: {ing.n_tiles} tiles, "
+              f"{ing.tiles_processed_space} counted onboard, "
+              f"{win.tiles_downlinked} downlinked "
+              f"({win.bytes_spent / 1e6:.2f} MB)")
+        return win
 
     print(f"== collaborative serving: {args.passes} orbital passes ==")
-    results, dropped = batcher.run(range(args.passes), one_pass)
-    for r in results:
-        total_pred += r.total_pred
-        total_true += r.total_true
+    _, dropped = batcher.run(range(args.passes), one_pass)
     if dropped:
         print(f"  straggler mitigation: {len(dropped)} passes re-queued "
               f"(missed the {args.deadline_s}s contact deadline)")
-    print(f"aggregate: pred={total_pred:.0f} true={total_true:.0f} "
-          f"rel err={abs(total_pred - total_true) / max(total_true, 1):.3f}")
+    r = mission.finalize()
+    print(f"aggregate: CMAE={r.cmae:.3f} pred={r.total_pred:.0f} "
+          f"true={r.total_true:.0f} "
+          f"rel err={abs(r.total_pred - r.total_true) / max(r.total_true, 1):.3f} "
+          f"energy={r.energy_spent_j:.1f}/{r.energy_budget_j:.1f}J "
+          f"bytes={r.bytes_downlinked / 1e6:.2f}MB "
+          f"of {r.bytes_budget / 1e6:.2f}MB")
 
 
 if __name__ == "__main__":

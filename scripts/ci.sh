@@ -14,3 +14,11 @@ python -m pytest -x -q
 
 echo "== kernel bench smoke =="
 python -m benchmarks.run kernels --json BENCH_kernels_smoke.json
+
+# Mission API drift gate: the examples are thin drivers over the public
+# surface, so a smoke run catches API breakage that unit tests can miss.
+echo "== example smoke: quickstart =="
+timeout 600 python examples/quickstart.py
+
+echo "== example smoke: constellation (2 sats) =="
+timeout 600 python examples/constellation_sim.py --sats 2

@@ -8,4 +8,11 @@ names.
 from repro.core.tiling import optimal_tile_size, tile_image, resize_tiles
 from repro.core.energy import RPI4, ATLAS, EnergyLedger, max_tiles_within_budget
 from repro.core.metrics import cmae, ap50
-from repro.core.pipeline import PipelineConfig, PipelineResult, run_pipeline
+from repro.core.pipeline import (PipelineConfig, PipelineResult, budgets_for,
+                                 run_pipeline)
+from repro.core.policies import (SelectionPolicy, Selection, PolicyContext,
+                                 available_policies, get_policy,
+                                 register_policy)
+from repro.core.mission import (Mission, Stage, Segment, IngestReport,
+                                WindowReport, default_contact_stages,
+                                default_ingest_stages)

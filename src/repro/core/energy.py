@@ -52,6 +52,11 @@ class EnergyLedger:
     def remaining(self) -> float:
         return max(self.budget_j - self.spent, 0.0)
 
+    def grant(self, j: float):
+        """Add harvested energy to the budget (streaming Missions grant
+        each ingested slice's day-fraction entitlement incrementally)."""
+        self.budget_j += j
+
     def charge_capture(self, n_images: int, j_per_image: float = 0.05):
         self.e_cap += n_images * j_per_image
 

@@ -83,6 +83,14 @@ def prepare_frames(frames, tile_size: int, sp_size: int, gd_size: int,
     """
     from repro.data.synthetic import tile_counts
 
+    if not frames:
+        n_pad = bucket_size(0)
+        return PreparedFrames(
+            tiles_sp=jnp.zeros((n_pad, sp_size, sp_size, 3), jnp.float32),
+            tiles_gd=jnp.zeros((n_pad, gd_size, gd_size, 3), jnp.float32),
+            moments=jnp.zeros((n_pad, 9), jnp.float32),
+            roi_std=np.zeros(0), true=np.zeros(0, np.float64), n=0)
+
     groups: dict = {}
     for i, (img, _, _) in enumerate(frames):
         groups.setdefault(np.asarray(img).shape, []).append(i)

@@ -1,15 +1,30 @@
-"""End-to-end TargetFuse pipeline + the paper's four baselines.
+"""Pipeline config/result types + the ``run_pipeline`` compatibility
+wrapper over the Mission stage-graph executor.
 
-Per orbital frame: tile -> (ROI filter) -> (dedup) -> onboard counting
-under the energy budget -> two-threshold selection + bandwidth-aware
-throttling -> ground recount of downlinked tiles -> aggregate counts.
-CMAE is computed against the generator's exact per-tile ground truth.
+MIGRATION NOTES (Mission API redesign)
+--------------------------------------
+The end-to-end pipeline used to live here as one ~200-line
+``run_pipeline`` monolith with the five baselines as inline
+``pcfg.method`` branches. It is now an explicit stage graph executed by
+:class:`repro.core.mission.Mission`:
 
-Stages 0-2 run through the device-resident engine
-(:mod:`repro.core.engine`): fused tile/resize/moments programs,
-moments reused for ROI + dedup, fixed-shape counting batches.
-``PipelineConfig(use_engine=False)`` selects the original
-host-orchestrated path, kept as the parity/benchmark reference.
+    ingest(frames):          Capture -> RoiFilter -> Dedup -> OnboardCount
+    contact_window(bytes):   Select -> Downlink -> GroundRecount -> Aggregate
+
+* The five baselines are registered
+  :class:`~repro.core.policies.SelectionPolicy` plugins
+  (``@register_policy("targetfuse")`` etc.); new policies and stages can
+  be added without touching core. ``PipelineConfig.method`` names the
+  plugin; ``PipelineConfig.policy`` is still the throttle fill order.
+* A ``Mission`` owns persistent budget state (``EnergyLedger`` + byte
+  ledger) across multiple ingests and contact windows — multi-pass /
+  multi-window / constellation scenarios compose from the streaming API
+  (see examples/constellation_sim.py).
+* ``run_pipeline(frames, space, ground, pcfg)`` remains and is
+  bit-identical to the pre-refactor monolith on both the engine and
+  reference paths (``pcfg.use_engine``), enforced by
+  tests/test_mission.py against the frozen oracle in
+  :mod:`repro.core._legacy`.
 
 Budget model (calibrated to the paper's published satellite numbers):
 the simulated tile set stands for a ``day_fraction`` = n_tiles /
@@ -22,7 +37,7 @@ so the resource regime matches the paper (onboard compute covers ~22%
 of captured tiles at 150 KJ; downlink covers ~15-20%), independent of
 the proxy's size.
 
-Baselines (paper §IV-A7):
+Baselines (paper §IV-A7), each a registered selection policy:
   space_only  — onboard counts only, no tile downlink
   ground_only — bent-pipe: raw tiles downlinked (index order) within
                 bandwidth; ground counts those; the rest contribute 0
@@ -36,29 +51,21 @@ Baselines (paper §IV-A7):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-import repro.core.dedup as dd
-from repro.core import engine, tiling
-from repro.core.cascade import count_tiles_batched, count_tiles_batched_ref
-from repro.core.energy import (DeviceProfile, EnergyLedger, RPI4,
-                               detector_gflops, max_tiles_within_budget)
-from repro.core.metrics import cmae
-from repro.core.throttle import throttle
+from repro.core.energy import DeviceProfile, RPI4
 
 
 @dataclass
 class PipelineConfig:
-    method: str = "targetfuse"           # space_only|ground_only|tiansuan|kodan|targetfuse
+    method: str = "targetfuse"           # a registered SelectionPolicy name
     tile_size: int = 128
     conf_p: float = 0.10
     conf_q: float = 0.55
-    policy: str = "dynamic_conf"
+    policy: str = "dynamic_conf"         # throttle fill order (Fig. 6)
     bandwidth_mbps: float = 50.0
     contact_s: float = 360.0
     contacts_per_day: float = 4.0
@@ -70,6 +77,10 @@ class PipelineConfig:
     roi_std_thresh: float = 0.02
     score_thresh: float = 0.15
     tiansuan_thresh: float = 0.5
+    # credit ground recounts to downlinked-but-unprocessed tiles in the
+    # tiansuan baseline (False reproduces the PR-1/paper behaviour where
+    # such tiles spend bytes yet keep pred = 0; see TiansuanPolicy)
+    tiansuan_credit_unprocessed: bool = False
     # --- day-fraction calibration (see module docstring) ---
     tiles_per_day: float = 100_000.0
     real_tile_px: int = 416              # byte/energy pricing scale
@@ -90,234 +101,43 @@ class PipelineResult:
     tiles_total: int
     energy_spent_j: float
     energy_budget_j: float
-    per_tile_pred: np.ndarray = field(repr=False, default=None)
-    per_tile_true: np.ndarray = field(repr=False, default=None)
+    per_tile_pred: Optional[np.ndarray] = field(repr=False, default=None)
+    per_tile_true: Optional[np.ndarray] = field(repr=False, default=None)
+
+    def summary(self) -> dict:
+        """Scalar fields only (no per-tile arrays) — the dict that
+        benchmarks/examples print or serialize."""
+        return {f.name: getattr(self, f.name) for f in fields(self)
+                if not f.name.startswith("per_tile")}
 
 
 def budgets_for(pcfg: PipelineConfig, n_tiles: int) -> Tuple[float, float, float]:
-    """-> (energy_budget_j, byte_budget, bytes_per_tile) for the sim slice."""
+    """-> (energy_budget_j, byte_budget, bytes_per_tile) for the sim slice.
+
+    Degenerate slices (``n_tiles <= 0`` or a non-positive
+    ``tiles_per_day`` calibration) get zero budgets instead of dividing
+    by zero — downstream selection then comes back empty.
+    """
+    tile_bytes = float(pcfg.real_tile_px ** 2 * 3)
+    if n_tiles <= 0 or pcfg.tiles_per_day <= 0:
+        return 0.0, 0.0, tile_bytes
     day_fraction = n_tiles / pcfg.tiles_per_day
     energy = pcfg.energy_budget_j * day_fraction
     byte_budget = (pcfg.bandwidth_mbps * 1e6 / 8.0 * pcfg.contact_s
                    * pcfg.contacts_per_day * day_fraction)
-    tile_bytes = float(pcfg.real_tile_px ** 2 * 3)
     return energy, byte_budget, tile_bytes
 
 
-def _prep_tiles(img, tile_size, input_size):
-    t = tiling.tile_image(jnp.asarray(img), tile_size)
-    return np.asarray(tiling.resize_tiles(t, input_size))
-
-
-def run_pipeline(frames, space, ground, pcfg: PipelineConfig,
+def run_pipeline(frames, space, ground, pcfg: PipelineConfig = None,
                  energy_cfgs=None) -> PipelineResult:
-    """frames: list of (image, boxes, classes). space/ground: (params, cfg).
+    """Compatibility wrapper: one-window Mission.
 
+    frames: list of (image, boxes, classes). space/ground: (params, cfg).
     ``energy_cfgs``: (space_cfg_full, ground_cfg_full) used to PRICE
     compute; defaults to the paper's full-scale Table II counters.
+
+    Equivalent to ``Mission(space, ground, pcfg).run(frames)`` —
+    bit-identical to the pre-refactor monolith (see module docstring).
     """
-    from repro.configs import get_config
-    from repro.data.synthetic import tile_counts
-
-    sp_params, sp_cfg = space
-    gd_params, gd_cfg = ground
-    if energy_cfgs is None:
-        energy_cfgs = (get_config("targetfuse-space"), get_config("targetfuse-ground"))
-    gfl_sp = detector_gflops(energy_cfgs[0])
-
-    # ---- stage 0: tile every frame, collect ground truth ----
-    if pcfg.use_engine:
-        # fused device-resident frame program (tile + resize both tiers +
-        # moments, once); tiles stay on device for the counting stages
-        prep = engine.prepare_frames(frames, pcfg.tile_size,
-                                     sp_cfg.input_size, gd_cfg.input_size)
-        tiles_sp, tiles_gd, true, n = prep.tiles_sp, prep.tiles_gd, prep.true, prep.n
-    else:
-        prep = None
-        all_tiles_sp, all_tiles_gd, all_true = [], [], []
-        for img, boxes, classes in frames:
-            s = img.shape[0]
-            all_true.append(tile_counts(boxes, s, pcfg.tile_size))
-            all_tiles_sp.append(_prep_tiles(img, pcfg.tile_size, sp_cfg.input_size))
-            all_tiles_gd.append(_prep_tiles(img, pcfg.tile_size, gd_cfg.input_size))
-        tiles_sp = np.concatenate(all_tiles_sp)
-        tiles_gd = np.concatenate(all_tiles_gd)
-        true = np.concatenate(all_true).astype(np.float64)
-        n = tiles_sp.shape[0]
-
-    def count_sel(params, cfg, tiles, sel):
-        """Count tiles[sel]: device gather + fixed-shape batches on the
-        engine path, host slice + seed batching on the reference path."""
-        if pcfg.use_engine:
-            return count_tiles_batched(params, cfg, tiles, idx=sel,
-                                       score_thresh=pcfg.score_thresh)
-        return count_tiles_batched_ref(params, cfg, tiles[sel],
-                                       score_thresh=pcfg.score_thresh)
-
-    energy_j, budget_bytes, tile_bytes = budgets_for(pcfg, n)
-    ledger = EnergyLedger(budget_j=energy_j)
-    ledger.charge_capture(len(frames))
-
-    pred = np.zeros(n, np.float64)
-    bytes_down = 0.0
-
-    # ---- ground_only: bent-pipe ----
-    if pcfg.method == "ground_only":
-        k = int(budget_bytes // tile_bytes)
-        sel = np.arange(min(k, n))
-        if len(sel):
-            c, _ = count_sel(gd_params, gd_cfg, tiles_gd, sel)
-            pred[sel] = c
-        bytes_down = len(sel) * tile_bytes
-        ledger.charge_downlink(bytes_down, pcfg.bandwidth_mbps)
-        return _result(pred, true, bytes_down, budget_bytes, 0, len(sel), n, ledger)
-
-    # ---- ROI filter (low-variance tiles are background/cloud) ----
-    active = np.ones(n, bool)
-    if pcfg.use_roi and pcfg.method in ("kodan", "targetfuse"):
-        if prep is not None:
-            raw_sd = prep.roi_std  # stddev moment from the fused program
-        else:
-            raw_sd = np.asarray(jnp.mean(jnp.std(jnp.asarray(tiles_sp),
-                                                 axis=(1, 2)), axis=-1))
-        active &= raw_sd > pcfg.roi_std_thresh
-
-    # ---- dedup ----
-    rep_of = np.arange(n)
-    if pcfg.use_dedup and pcfg.method in ("kodan", "targetfuse") and active.sum() > 4:
-        k = pcfg.k_clusters or max(2, int(active.sum()) // 2)
-        idx_active = np.where(active)[0]
-        if prep is not None:
-            # bucketed gather of the fused program's moments: pad the index
-            # vector so the gather (and the whole dedup) is shape-stable
-            n_act = len(idx_active)
-            idx_pad = np.zeros(dd.dedup_pad_size(n_act), np.int64)
-            idx_pad[:n_act] = idx_active
-            res = dd.dedup_from_moments(prep.moments[jnp.asarray(idx_pad)], k,
-                                        jax.random.PRNGKey(pcfg.seed),
-                                        n=n_act)
-        else:
-            res = dd.dedup(jnp.asarray(tiles_sp[idx_active]), k,
-                           jax.random.PRNGKey(pcfg.seed))
-        assign = np.asarray(res.assign)
-        rep_local = np.asarray(res.rep_idx)
-        rep_of[idx_active] = idx_active[rep_local[assign]]
-        ledger.charge_aggregate(len(idx_active))
-
-    reps = np.unique(rep_of[active])
-
-    # ---- energy-capped onboard counting ----
-    cap = max_tiles_within_budget(ledger.remaining * 0.95, gfl_sp, pcfg.hardware)
-    process = reps[:cap] if len(reps) > cap else reps
-    n_processed = len(process)
-    ledger.charge_compute(n_processed, gfl_sp, pcfg.hardware)
-
-    counts_sp = np.zeros(n)
-    conf = np.full(n, -1.0)
-    if n_processed:
-        c, f = count_sel(sp_params, sp_cfg, tiles_sp, process)
-        counts_sp[process] = c
-        conf[process] = f
-    counts_sp = counts_sp[rep_of]
-    conf = conf[rep_of]
-    processed_mask = np.isin(rep_of, process) & active
-
-    # ---- selection + throttling ----
-    if pcfg.method == "space_only":
-        pred[processed_mask] = counts_sp[processed_mask]
-        return _result(pred, true, 0.0, budget_bytes, n_processed, 0, n, ledger)
-
-    if pcfg.method == "tiansuan":
-        accept = processed_mask & (conf > pcfg.tiansuan_thresh)
-        pred[accept] = counts_sp[accept]
-        # unprocessed tiles (energy cap) join the indiscriminate queue
-        cand = np.where(active & ~accept)[0]
-        cand_reps = np.unique(rep_of[cand])
-        k = int(budget_bytes // tile_bytes)
-        sel_reps = cand_reps[:k]
-        if len(sel_reps):
-            c, _ = count_sel(gd_params, gd_cfg, tiles_gd, sel_reps)
-            counts_gd = np.zeros(n)
-            counts_gd[sel_reps] = c
-            got = np.isin(rep_of, sel_reps) & processed_mask & ~accept
-            pred[got] = counts_gd[rep_of][got]
-        bytes_down = len(sel_reps) * tile_bytes
-        ledger.charge_downlink(bytes_down, pcfg.bandwidth_mbps)
-        return _result(pred, true, bytes_down, budget_bytes, n_processed,
-                       len(sel_reps), n, ledger)
-
-    # kodan / targetfuse: two-threshold selection over representatives
-    rep_mask = processed_mask & (rep_of == np.arange(n))
-    rep_idx = np.where(rep_mask)[0]
-    kodan = pcfg.method == "kodan"
-    budget = np.float64(1e18) if kodan else np.float64(budget_bytes)
-    n_rep = len(rep_idx)
-    if pcfg.use_engine:
-        # shape-stable: pad the rep set to a bucket; pad slots are
-        # active=False so they sort last and take no budget (masks over
-        # the real slots are bit-identical to the unpadded call)
-        n_pad = dd.bucket_size(max(n_rep, 1))
-        conf_pad = np.full(n_pad, -1.0)
-        conf_pad[:n_rep] = conf[rep_idx]
-        act = np.zeros(n_pad, bool)
-        act[:n_rep] = True
-        tr = throttle(jnp.asarray(conf_pad), jnp.full(n_pad, tile_bytes),
-                      budget, pcfg.conf_p, pcfg.conf_q, pcfg.policy,
-                      active=jnp.asarray(act))
-        space_m = np.asarray(tr.space)[:n_rep]
-        down_m = np.asarray(tr.downlink)[:n_rep]
-    else:
-        tr = throttle(jnp.asarray(conf[rep_idx]),
-                      jnp.full(n_rep, tile_bytes),
-                      budget, pcfg.conf_p, pcfg.conf_q, pcfg.policy)
-        space_m = np.asarray(tr.space)
-        down_m = np.asarray(tr.downlink)
-    down_reps = rep_idx[down_m]
-
-    # leftover bandwidth: raw-downlink representatives the energy budget
-    # never let us process onboard (Algorithm 2 maximizes utilization —
-    # an unprocessed tile earns a ground count instead of counting 0)
-    unproc_reps = np.where(active & (rep_of == np.arange(n))
-                           & ~processed_mask)[0]
-    bytes_down = len(down_reps) * tile_bytes
-    k_extra = int(max(budget - bytes_down, 0.0) // tile_bytes)
-    extra_reps = unproc_reps[:k_extra]
-    down_all = np.concatenate([down_reps, extra_reps]).astype(np.int64)
-
-    counts_gd = np.zeros(n)
-    if len(down_all):
-        c, _ = count_sel(gd_params, gd_cfg, tiles_gd, down_all)
-        counts_gd[down_all] = c
-    counts_gd = counts_gd[rep_of]
-
-    rep_space = np.zeros(n, bool)
-    rep_space[rep_idx[space_m]] = True
-    rep_down = np.zeros(n, bool)
-    rep_down[down_all] = True
-    use_ground = rep_down[rep_of] & active
-    use_space = rep_space[rep_of] & processed_mask & ~use_ground
-    pred[use_space] = counts_sp[use_space]
-    pred[use_ground] = counts_gd[use_ground]
-
-    bytes_down = len(down_all) * tile_bytes
-    ledger.charge_downlink(min(bytes_down, budget_bytes), pcfg.bandwidth_mbps)
-    return _result(pred, true, bytes_down, budget_bytes, n_processed,
-                   len(down_all), n, ledger)
-
-
-def _result(pred, true, bytes_down, budget_bytes, n_proc, n_down, n,
-            ledger) -> PipelineResult:
-    return PipelineResult(
-        cmae=cmae(pred, true),
-        total_true=float(true.sum()),
-        total_pred=float(pred.sum()),
-        bytes_downlinked=float(bytes_down),
-        bytes_budget=float(budget_bytes),
-        tiles_processed_space=int(n_proc),
-        tiles_downlinked=int(n_down),
-        tiles_total=int(n),
-        energy_spent_j=float(ledger.spent),
-        energy_budget_j=float(ledger.budget_j),
-        per_tile_pred=pred,
-        per_tile_true=true,
-    )
+    from repro.core.mission import Mission
+    return Mission(space, ground, pcfg, energy_cfgs=energy_cfgs).run(frames)

@@ -23,6 +23,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 POLICIES = ("low_conf_first", "fixed_conf", "dynamic_conf")
 
@@ -72,6 +73,30 @@ def throttle(conf: jnp.ndarray, sizes: jnp.ndarray, budget_bytes,
         dropped = jnp.zeros((n,), bool)
         space = high | leftover
     return ThrottleResult(discard, space, downlink, dropped, bytes_used)
+
+
+def throttle_padded(conf, tile_bytes: float, budget_bytes, conf_p: float,
+                    conf_q: float, policy: str = "dynamic_conf",
+                    n_pad: int = None):
+    """Shape-stable host-facing wrapper around :func:`throttle`.
+
+    Pads ``conf`` (host array, (n,)) to ``n_pad`` slots with inactive
+    entries (conf = -1, active = False) so the compiled program is
+    reused per bucket size rather than per workload size; pad slots sort
+    last and take no budget. Returns host ``(space, downlink)`` boolean
+    masks over the real ``n`` slots — bit-identical to the unpadded
+    call.
+    """
+    n = int(np.shape(conf)[0])
+    n_pad = n_pad if n_pad is not None else n
+    conf_pad = np.full(n_pad, -1.0)
+    conf_pad[:n] = conf
+    act = np.zeros(n_pad, bool)
+    act[:n] = True
+    tr = throttle(jnp.asarray(conf_pad), jnp.full(n_pad, tile_bytes),
+                  budget_bytes, conf_p, conf_q, policy,
+                  active=jnp.asarray(act))
+    return np.asarray(tr.space)[:n], np.asarray(tr.downlink)[:n]
 
 
 def contact_budget_bytes(bandwidth_mbps: float, contact_s: float) -> float:

@@ -3,8 +3,9 @@ TargetFuse cascade (the paper-kind end-to-end path).
 
   PYTHONPATH=src python -m repro.launch.serve --frames 4 --revisits 3
 
-Trains (or loads cached) reduced counters, then runs the full pipeline
-against all five methods and prints the CMAE table.
+Trains (or loads cached) reduced counters, then runs a one-window
+Mission for every registered selection policy and prints the CMAE
+table.
 """
 from __future__ import annotations
 
@@ -16,7 +17,9 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.cascade import fit_counter
-from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.mission import Mission
+from repro.core.pipeline import PipelineConfig
+from repro.core.policies import available_policies
 from repro.data.synthetic import DATASETS, SceneSpec, make_scene, revisit_frames
 
 CACHE = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -89,13 +92,14 @@ def main():
 
     print(f"{'method':14s} {'CMAE':>7s} {'pred':>6s} {'true':>6s} "
           f"{'down':>5s} {'proc':>5s} {'MB':>7s}")
-    for method in ["space_only", "ground_only", "tiansuan", "kodan", "targetfuse"]:
+    for method in available_policies():
         pcfg = PipelineConfig(method=method, bandwidth_mbps=args.bandwidth,
                               score_thresh=0.25)
-        r = run_pipeline(frames, space, ground, pcfg)
-        print(f"{method:14s} {r.cmae:7.3f} {r.total_pred:6.0f} {r.total_true:6.0f} "
-              f"{r.tiles_downlinked:5d} {r.tiles_processed_space:5d} "
-              f"{r.bytes_downlinked / 1e6:7.2f}")
+        s = Mission(space, ground, pcfg).run(frames).summary()
+        print(f"{method:14s} {s['cmae']:7.3f} {s['total_pred']:6.0f} "
+              f"{s['total_true']:6.0f} {s['tiles_downlinked']:5d} "
+              f"{s['tiles_processed_space']:5d} "
+              f"{s['bytes_downlinked'] / 1e6:7.2f}")
 
 
 if __name__ == "__main__":

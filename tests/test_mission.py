@@ -1,0 +1,329 @@
+"""Mission API tests: policy parity against the frozen pre-refactor
+monolith, streaming contact windows, budget edge cases, and
+registry/stage extensibility.
+"""
+import inspect
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core._legacy import run_pipeline_legacy
+from repro.core.cascade import fit_counter
+from repro.core.mission import Mission, Stage, default_ingest_stages
+from repro.core.pipeline import (PipelineConfig, PipelineResult, budgets_for,
+                                 run_pipeline)
+from repro.core.policies import (Selection, SelectionPolicy,
+                                 available_policies, get_policy,
+                                 register_policy)
+from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
+
+SPEC = SceneSpec("mini", 384, (12, 18), (10, 24), cloud_fraction=0.2)
+METHODS = ("space_only", "ground_only", "tiansuan", "kodan", "targetfuse")
+
+
+@pytest.fixture(scope="module")
+def counters():
+    rng = np.random.default_rng(0)
+    scenes = [make_scene(rng, SPEC) for _ in range(4)]
+    sp_cfg = reduced(get_config("targetfuse-space"))
+    gd_cfg = reduced(get_config("targetfuse-ground"))
+    sp, _ = fit_counter(sp_cfg, scenes, 128, 150, jax.random.PRNGKey(0))
+    gd, _ = fit_counter(gd_cfg, scenes, 128, 300, jax.random.PRNGKey(1))
+    return (sp, sp_cfg), (gd, gd_cfg)
+
+
+@pytest.fixture(scope="module")
+def frames():
+    rng = np.random.default_rng(7)
+    img, b, c = make_scene(rng, SPEC)
+    return revisit_frames(rng, img, b, c, 3)
+
+
+def _assert_bit_identical(a: PipelineResult, b: PipelineResult):
+    np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred)
+    np.testing.assert_array_equal(a.per_tile_true, b.per_tile_true)
+    assert a.summary() == b.summary()
+
+
+# ---------------------------------------------------------------------------
+# policy parity: Mission executor vs frozen pre-refactor monolith
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_engine", (True, False),
+                         ids=("engine", "reference"))
+@pytest.mark.parametrize("method", METHODS)
+def test_mission_bit_identical_to_legacy(method, use_engine, frames, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25,
+                          use_engine=use_engine)
+    got = Mission(space, ground, pcfg).run(frames)
+    want = run_pipeline_legacy(frames, space, ground, pcfg)
+    _assert_bit_identical(got, want)
+
+
+def test_run_pipeline_is_mission_wrapper(frames, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    _assert_bit_identical(run_pipeline(frames, space, ground, pcfg),
+                          Mission(space, ground, pcfg).run(frames))
+
+
+def test_executor_has_no_method_branching():
+    """The acceptance criterion: zero ``pcfg.method`` branching in the
+    executor — dispatch is registry-only."""
+    import repro.core.mission as mission
+    src = inspect.getsource(mission)
+    assert "method ==" not in src
+    assert "method in (" not in src
+    assert "method in [" not in src
+
+
+def test_all_five_baselines_are_registered_policies():
+    assert set(METHODS) <= set(available_policies())
+    for m in METHODS:
+        assert get_policy(m).name == m
+
+
+# ---------------------------------------------------------------------------
+# tiansuan ground-credit audit (satellite task)
+# ---------------------------------------------------------------------------
+
+def _tiansuan_cfg(**kw):
+    # tiny energy budget -> the onboard cap leaves active tiles
+    # unprocessed; ample bandwidth -> they all join the downlink queue
+    return PipelineConfig(method="tiansuan", score_thresh=0.25,
+                          energy_budget_j=8_000.0, bandwidth_mbps=500.0,
+                          **kw)
+
+
+@pytest.mark.parametrize("use_engine", (True, False),
+                         ids=("engine", "reference"))
+def test_tiansuan_unprocessed_downlink_credit(use_engine, frames, counters):
+    """Audited PR-1 behaviour: energy-capped unprocessed tiles join the
+    indiscriminate downlink queue and spend bytes, but their ground
+    counts are never credited (the ``processed_mask`` conjunct). The
+    default preserves that bit-for-bit; ``tiansuan_credit_unprocessed``
+    credits every downlinked tile."""
+    space, ground = counters
+    legacy_cfg = _tiansuan_cfg(use_engine=use_engine)
+    m = Mission(space, ground, legacy_cfg)
+    r_legacy = m.run(frames)
+    _assert_bit_identical(r_legacy,
+                          run_pipeline_legacy(frames, space, ground,
+                                              legacy_cfg))
+
+    seg = m._segments[0]
+    down = seg.selection.downlink
+    unproc_down = down[~seg.processed[down]]
+    assert len(unproc_down) > 0, "scenario must exercise the energy cap"
+    # bytes were spent on these tiles ...
+    assert seg.bytes_requested >= len(down) * m.tile_bytes - 1e-6
+    # ... but the default (paper-parity) behaviour credits none of them
+    assert np.all(r_legacy.per_tile_pred[unproc_down] == 0.0)
+
+    fixed_cfg = _tiansuan_cfg(use_engine=use_engine,
+                              tiansuan_credit_unprocessed=True)
+    m2 = Mission(space, ground, fixed_cfg)
+    r_fixed = m2.run(frames)
+    seg2 = m2._segments[0]
+    # same downlink selection, same bytes — only crediting changes
+    np.testing.assert_array_equal(seg2.selection.downlink, down)
+    assert r_fixed.bytes_downlinked == r_legacy.bytes_downlinked
+    np.testing.assert_array_equal(r_fixed.per_tile_pred[unproc_down],
+                                  seg2.counts_gd[unproc_down])
+    others = np.ones(seg.n, bool)
+    others[unproc_down] = False
+    np.testing.assert_array_equal(r_fixed.per_tile_pred[others],
+                                  r_legacy.per_tile_pred[others])
+
+
+# ---------------------------------------------------------------------------
+# budget edge cases (satellite task)
+# ---------------------------------------------------------------------------
+
+def test_budgets_for_degenerate_inputs():
+    pcfg = PipelineConfig()
+    tile_bytes = float(pcfg.real_tile_px ** 2 * 3)
+    assert budgets_for(pcfg, 0) == (0.0, 0.0, tile_bytes)
+    assert budgets_for(PipelineConfig(tiles_per_day=0.0), 100) == \
+        (0.0, 0.0, tile_bytes)
+    assert budgets_for(PipelineConfig(tiles_per_day=-5.0), 100) == \
+        (0.0, 0.0, tile_bytes)
+
+
+@pytest.mark.parametrize("use_engine", (True, False),
+                         ids=("engine", "reference"))
+@pytest.mark.parametrize("method", METHODS)
+def test_empty_frames(method, use_engine, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, use_engine=use_engine)
+    r = run_pipeline([], space, ground, pcfg)
+    assert r.tiles_total == 0
+    assert r.tiles_downlinked == 0
+    assert r.tiles_processed_space == 0
+    assert r.bytes_downlinked == 0.0
+    assert r.per_tile_pred.shape == (0,)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_zero_tiles_per_day_empty_selection(method, frames, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25,
+                          tiles_per_day=0.0)
+    r = run_pipeline(frames, space, ground, pcfg)
+    assert r.tiles_processed_space == 0  # zero energy -> nothing onboard
+    if method != "kodan":  # kodan is bandwidth-oblivious by design
+        assert r.tiles_downlinked == 0
+    assert r.energy_budget_j == 0.0
+
+
+@pytest.mark.parametrize("method", ("ground_only", "tiansuan", "targetfuse"))
+def test_byte_budget_below_one_tile(method, frames, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25,
+                          bandwidth_mbps=1e-6)  # budget << one tile
+    _, byte_budget, tile_bytes = budgets_for(pcfg, 48)
+    assert byte_budget < tile_bytes
+    r = run_pipeline(frames, space, ground, pcfg)
+    assert r.tiles_downlinked == 0
+    assert r.bytes_downlinked == 0.0
+
+
+# ---------------------------------------------------------------------------
+# PipelineResult typing + summary (satellite task)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_result_optional_and_summary():
+    r = PipelineResult(cmae=0.5, total_true=10.0, total_pred=9.0,
+                       bytes_downlinked=1.0, bytes_budget=2.0,
+                       tiles_processed_space=3, tiles_downlinked=1,
+                       tiles_total=4, energy_spent_j=5.0,
+                       energy_budget_j=6.0)
+    assert r.per_tile_pred is None and r.per_tile_true is None
+    s = r.summary()
+    assert s["cmae"] == 0.5 and s["tiles_total"] == 4
+    assert not any(k.startswith("per_tile") for k in s)
+    assert "per_tile_pred" not in repr(r)
+
+
+# ---------------------------------------------------------------------------
+# streaming: multi-ingest, multi-window, carried budgets
+# ---------------------------------------------------------------------------
+
+def test_streaming_two_windows_budget_consistent(frames, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    m = Mission(space, ground, pcfg)
+
+    ing1 = m.ingest(frames)
+    w1 = m.contact_window()
+    ing2 = m.ingest(frames)
+    w2 = m.contact_window()
+    r = m.result()
+
+    # budgets accumulate across passes/windows
+    assert m.ledger.budget_j == pytest.approx(
+        ing1.energy_granted_j + ing2.energy_granted_j)
+    assert r.bytes_budget == pytest.approx(w1.budget_bytes + w2.budget_bytes)
+    assert r.tiles_total == ing1.n_tiles + ing2.n_tiles
+    # spend never exceeds the offered window budgets
+    assert m.bytes_spent <= r.bytes_budget + 1e-6
+    assert w1.bytes_spent <= w1.budget_bytes + 1e-6
+    assert w2.bytes_spent <= w2.budget_bytes + 1e-6
+    # per-tile outputs cover every ingested tile
+    assert r.per_tile_pred.shape == (r.tiles_total,)
+    # one-shot over the same first pass agrees with window 1's segment
+    one = Mission(space, ground, pcfg).run(frames)
+    np.testing.assert_array_equal(one.per_tile_pred,
+                                  m._segments[0].pred)
+
+
+def test_streaming_window_order_is_fifo(frames, counters):
+    """Two pending segments drain FIFO within one window; the second
+    sees only leftover bytes."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    m = Mission(space, ground, pcfg)
+    m.ingest(frames)
+    m.ingest(frames)
+    n = m._segments[0].n
+    tile_bytes = m.tile_bytes
+    rep = m.contact_window(budget_bytes=tile_bytes * (n + 2))
+    # first segment downlinks n tiles; second only the 2 leftover slots
+    assert len(m._segments[0].selection.downlink) == n
+    assert len(m._segments[1].selection.downlink) == 2
+    assert rep.tiles_downlinked == n + 2
+    assert rep.bytes_spent <= rep.budget_bytes + 1e-6
+
+
+def test_finalize_flushes_pending_onboard_only(frames, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    m = Mission(space, ground, pcfg)
+    m.ingest(frames)
+    assert m.pending_segments == 1
+    r = m.finalize()
+    assert m.pending_segments == 0
+    assert r.tiles_downlinked == 0  # zero-byte window: nothing transmits
+    assert r.bytes_budget == 0.0
+    # dynamic_conf: leftovers are counted in space, so onboard results land
+    assert r.tiles_processed_space > 0
+    assert r.total_pred > 0
+
+
+def test_ingest_report_fields(frames, counters):
+    space, ground = counters
+    m = Mission(space, ground,
+                PipelineConfig(method="targetfuse", score_thresh=0.25))
+    ing = m.ingest(frames)
+    assert ing.n_frames == len(frames)
+    assert ing.n_tiles == (384 // 128) ** 2 * len(frames)
+    assert 0 < ing.tiles_processed_space <= ing.n_tiles
+    assert ing.energy_granted_j > 0 and ing.byte_entitlement > 0
+
+
+# ---------------------------------------------------------------------------
+# extensibility: policies and stages register without touching core
+# ---------------------------------------------------------------------------
+
+def test_custom_policy_registers_and_runs(frames, counters):
+    @register_policy("_test_discard_all")
+    class DiscardAll(SelectionPolicy):
+        def select(self, ctx, budget_bytes):
+            return Selection(np.zeros(ctx.n, bool), np.zeros(0, np.int64),
+                             np.zeros(ctx.n, bool), 0.0)
+
+    assert "_test_discard_all" in available_policies()
+    space, ground = counters
+    r = Mission(space, ground,
+                PipelineConfig(method="_test_discard_all",
+                               score_thresh=0.25)).run(frames)
+    assert r.total_pred == 0.0
+    assert r.tiles_downlinked == 0
+    assert r.tiles_processed_space > 0  # onboard stages still ran
+
+
+def test_unknown_policy_rejected(counters):
+    space, ground = counters
+    with pytest.raises(ValueError, match="unknown selection policy"):
+        Mission(space, ground, PipelineConfig(method="nope"))
+
+
+def test_custom_stage_inserts_into_graph(frames, counters):
+    calls = []
+
+    class Probe(Stage):
+        name = "probe"
+
+        def run(self, mission, seg, window=None):
+            calls.append(seg.n)
+
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    m = Mission(space, ground, pcfg,
+                ingest_stages=default_ingest_stages() + [Probe()])
+    m.ingest(frames)
+    m.ingest(frames)
+    assert calls == [m._segments[0].n, m._segments[1].n]
