@@ -1,0 +1,131 @@
+"""Constellation throughput: the vectorized Fleet engine vs the looped
+sequential-Mission oracle on identical scenarios.
+
+For each fleet size (default 2/8/32 satellites, override with the
+``FLEET_BENCH_SATS`` env var, e.g. ``FLEET_BENCH_SATS=2,8``), one
+deterministic multi-round scenario (eclipse/sunlit harvest, rotating
+variable-bandwidth contact windows) is generated ONCE and executed by
+both arms, so timing excludes scene synthesis and the two arms consume
+byte-identical inputs. Both paths are compile-warmed on a small
+scenario first — the speedup measured here is steady-state execution
+(shared frame buckets + shared counting batches), not compile
+amortization, which benchmarks/pipeline_bench.py already covers.
+
+Per size: fleet and loop wall-clock (best of ``iters``), speedup,
+per-satellite tile throughput, and an exact-parity check of per-tile
+predictions between the arms. Writes ``BENCH_fleet.json``; the
+acceptance gate is >= 2x at 8 satellites.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+JSON_PATH = "BENCH_fleet.json"
+DEFAULT_SATS = (2, 8, 32)
+
+
+def _sats_from_env():
+    env = os.environ.get("FLEET_BENCH_SATS", "")
+    if not env:
+        return DEFAULT_SATS
+    return tuple(int(x) for x in env.replace(",", " ").split())
+
+
+def run(json_path: str = None):
+    import numpy as np
+
+    from benchmarks.common import counters
+    from repro.core.fleet import run_scenario
+    from repro.core.pipeline import PipelineConfig
+    from repro.data.scenarios import (FleetScenarioSpec, GroundStation,
+                                      generate_scenario)
+    from repro.data.synthetic import SceneSpec
+
+    if json_path is None:
+        # smoke configs redirect the report (FLEET_BENCH_JSON) so tiny
+        # CI runs never clobber the committed BENCH_fleet.json
+        json_path = os.environ.get("FLEET_BENCH_JSON", JSON_PATH)
+    space, ground = counters()
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    scene = SceneSpec("fleet", 384, (10, 20), (10, 24), cloud_fraction=0.25)
+    n_rounds = int(os.environ.get("FLEET_BENCH_ROUNDS", "3"))
+    iters = int(os.environ.get("FLEET_BENCH_ITERS", "3"))
+    frames_per_pass = int(os.environ.get("FLEET_BENCH_FRAMES", "1"))
+
+    def spec_for(n_sats, seed):
+        return FleetScenarioSpec(
+            n_sats=n_sats, n_rounds=n_rounds,
+            frames_per_pass=frames_per_pass,
+            stations=(GroundStation("gs0"),
+                      GroundStation("gs1", bandwidth_mbps=30.0)),
+            scene_mix=(scene,), seed=seed)
+
+    # compile-warm both arms (shared XLA cache: every bucketed program
+    # the timed runs need exists after this)
+    warm = generate_scenario(spec_for(2, seed=1))
+    run_scenario(space, ground, pcfg, warm, fleet=True)
+    run_scenario(space, ground, pcfg, warm, fleet=False)
+
+    def best(fn):
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts), out
+
+    rows, report = [], {}
+    for n_sats in _sats_from_env():
+        sc = generate_scenario(spec_for(n_sats, seed=5))
+        t_fleet, (res_f, _) = best(
+            lambda: run_scenario(space, ground, pcfg, sc, fleet=True))
+        t_loop, (res_l, _) = best(
+            lambda: run_scenario(space, ground, pcfg, sc, fleet=False))
+        max_dev = 0.0
+        for a, b in zip(res_f, res_l):
+            if a.per_tile_pred.size:
+                max_dev = max(max_dev, float(np.max(np.abs(
+                    a.per_tile_pred - b.per_tile_pred))))
+            assert a.summary() == b.summary(), "fleet/loop summary mismatch"
+        tiles = sum(r.tiles_total for r in res_f)
+        speedup = t_loop / t_fleet
+        report[f"sats_{n_sats}"] = {
+            "n_sats": n_sats, "rounds": n_rounds,
+            "frames_per_pass": frames_per_pass, "tiles": tiles,
+            "fleet_s": t_fleet, "loop_s": t_loop, "speedup": speedup,
+            "fleet_tiles_per_s": tiles / t_fleet,
+            "fleet_tiles_per_s_per_sat": tiles / t_fleet / n_sats,
+            "loop_tiles_per_s": tiles / t_loop,
+            "pred_max_dev": max_dev,
+        }
+        rows.append((f"fleet_{n_sats}sats", t_fleet * 1e6,
+                     f"speedup={speedup:.2f}x tps={tiles / t_fleet:.0f} "
+                     f"tps/sat={tiles / t_fleet / n_sats:.0f} "
+                     f"dev={max_dev:.1e}"))
+
+    report["_summary"] = {
+        "speedup_at_8_sats": report.get("sats_8", {}).get("speedup"),
+        "gate_2x_at_8_sats": (report["sats_8"]["speedup"] >= 2.0
+                              if "sats_8" in report else None),
+        "max_pred_dev": max(r["pred_max_dev"] for k, r in report.items()
+                            if not k.startswith("_")),
+    }
+    rows.append(("fleet_summary", 0.0,
+                 f"speedup@8={report['_summary']['speedup_at_8_sats']} "
+                 f"max_dev={report['_summary']['max_pred_dev']:.1e}"))
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2)
+    if report["_summary"]["gate_2x_at_8_sats"] is False:
+        # fail loudly (run.py --strict turns this into a nonzero exit);
+        # smoke configs without an 8-sat row skip the gate by design
+        raise AssertionError(
+            f"fleet speedup gate: {report['sats_8']['speedup']:.2f}x < 2x "
+            f"at 8 satellites (see {json_path})")
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

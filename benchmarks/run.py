@@ -4,6 +4,10 @@ Prints ``name,us_per_call,derived`` CSV. Select figures with
 ``python -m benchmarks.run fig7 fig11`` (all by default). Pass
 ``--json PATH`` to also write the rows as a ``name ->
 {us_per_call, derived}`` dict (the ``BENCH_*.json`` trajectory files).
+By default a module that raises is reported as an ERROR row and the
+harness keeps going (exit 0); ``--strict`` makes any module failure
+exit nonzero — CI smoke runs use it so bench-embedded gates (e.g. the
+fleet/loop parity assert) actually fail the build.
 """
 from __future__ import annotations
 
@@ -12,11 +16,14 @@ import sys
 import time
 
 FIGS = ("fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-        "pipeline", "kernels")
+        "pipeline", "fleet", "kernels")
 
 
 def main() -> None:
     argv = sys.argv[1:]
+    strict = "--strict" in argv
+    if strict:
+        argv.remove("--strict")
     json_path = None
     if "--json" in argv:
         i = argv.index("--json")
@@ -54,11 +61,15 @@ def main() -> None:
     if "pipeline" in want:
         from benchmarks import pipeline_bench as m
         mods.append(m)
+    if "fleet" in want:
+        from benchmarks import fleet_bench as m
+        mods.append(m)
     if "kernels" in want:
         from benchmarks import kernel_bench as m
         mods.append(m)
 
     results = {}
+    failed = []
     print("name,us_per_call,derived")
     for mod in mods:
         t0 = time.time()
@@ -69,6 +80,7 @@ def main() -> None:
         except Exception as e:  # keep the harness running for later figs
             print(f"{mod.__name__},0.0,ERROR={e!r}", flush=True)
             results[mod.__name__] = {"us_per_call": 0.0, "derived": f"ERROR={e!r}"}
+            failed.append(mod.__name__)
         print(f"# {mod.__name__} done in {time.time() - t0:.0f}s",
               file=sys.stderr)
 
@@ -76,6 +88,8 @@ def main() -> None:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)
         print(f"# wrote {json_path}", file=sys.stderr)
+    if strict and failed:
+        sys.exit(f"--strict: benchmark module(s) failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

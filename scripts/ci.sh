@@ -13,12 +13,17 @@ echo "== tier-1 tests =="
 python -m pytest -x -q
 
 echo "== kernel bench smoke =="
-python -m benchmarks.run kernels --json BENCH_kernels_smoke.json
+python -m benchmarks.run kernels --strict --json BENCH_kernels_smoke.json
 
 # Mission API drift gate: the examples are thin drivers over the public
 # surface, so a smoke run catches API breakage that unit tests can miss.
 echo "== example smoke: quickstart =="
 timeout 600 python examples/quickstart.py
 
-echo "== example smoke: constellation (2 sats) =="
-timeout 600 python examples/constellation_sim.py --sats 2
+echo "== example smoke: constellation fleet path (2 sats, parity-checked) =="
+timeout 600 python examples/constellation_sim.py --sats 2 --rounds 2 --check
+
+echo "== fleet bench smoke (tiny config) =="
+FLEET_BENCH_SATS=2 FLEET_BENCH_ROUNDS=1 FLEET_BENCH_ITERS=1 \
+  FLEET_BENCH_JSON=BENCH_fleet_smoke.json \
+  timeout 600 python -m benchmarks.run fleet --strict

@@ -16,3 +16,5 @@ from repro.core.policies import (SelectionPolicy, Selection, PolicyContext,
 from repro.core.mission import (Mission, Stage, Segment, IngestReport,
                                 WindowReport, default_contact_stages,
                                 default_ingest_stages)
+from repro.core.energy import ByteLedger, FleetLedger
+from repro.core.fleet import Fleet, run_scenario

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 
 @dataclass(frozen=True)
 class DeviceProfile:
@@ -70,6 +72,173 @@ class EnergyLedger:
     def charge_downlink(self, n_bytes: float, bandwidth_mbps: float):
         seconds = n_bytes * 8.0 / (bandwidth_mbps * 1e6)
         self.e_down += seconds * RADIO_POWER_W
+
+
+@dataclass
+class ByteLedger:
+    """Downlink byte accounting of one satellite: bytes offered across
+    contact windows, bytes the policies asked to transmit, and bytes
+    actually charged (capped by each window's budget)."""
+
+    budget: float = 0.0
+    requested: float = 0.0
+    spent: float = 0.0
+
+
+def _energy_lane(field):
+    def fget(self):
+        return float(getattr(self._ledger, field)[self._sat])
+    return property(fget)
+
+
+def _byte_lane(field):
+    def fget(self):
+        return float(getattr(self._ledger, field)[self._sat])
+
+    def fset(self, v):
+        getattr(self._ledger, field)[self._sat] = v
+    return property(fget, fset)
+
+
+class SatEnergyView:
+    """EnergyLedger-compatible view of one lane of a :class:`FleetLedger`.
+
+    Scalar charges write into the stacked arrays with the exact same
+    float64 arithmetic as :class:`EnergyLedger`, so a Mission running on
+    a view is bit-identical to one running on its own ledger.
+    """
+
+    __slots__ = ("_ledger", "_sat")
+
+    def __init__(self, ledger: "FleetLedger", sat: int):
+        self._ledger = ledger
+        self._sat = sat
+
+    budget_j = _energy_lane("budget_j")
+    e_cap = _energy_lane("e_cap")
+    e_com = _energy_lane("e_com")
+    e_agg = _energy_lane("e_agg")
+    e_down = _energy_lane("e_down")
+
+    @property
+    def spent(self) -> float:
+        return self.e_cap + self.e_com + self.e_agg + self.e_down
+
+    @property
+    def remaining(self) -> float:
+        return max(self.budget_j - self.spent, 0.0)
+
+    def grant(self, j: float):
+        self._ledger.budget_j[self._sat] += j
+
+    def charge_capture(self, n_images: int, j_per_image: float = 0.05):
+        self._ledger.e_cap[self._sat] += n_images * j_per_image
+
+    def charge_compute(self, n_tiles: int, gflops_per_tile: float,
+                       profile: DeviceProfile):
+        self._ledger.e_com[self._sat] += (
+            n_tiles * gflops_per_tile * profile.joules_per_gflop)
+
+    def charge_aggregate(self, n_ops: int = 1000, j_per_op: float = 1e-6):
+        self._ledger.e_agg[self._sat] += n_ops * j_per_op
+
+    def charge_downlink(self, n_bytes: float, bandwidth_mbps: float):
+        seconds = n_bytes * 8.0 / (bandwidth_mbps * 1e6)
+        self._ledger.e_down[self._sat] += seconds * RADIO_POWER_W
+
+
+class SatBytesView:
+    """ByteLedger-compatible view of one lane of a :class:`FleetLedger`."""
+
+    __slots__ = ("_ledger", "_sat")
+
+    def __init__(self, ledger: "FleetLedger", sat: int):
+        self._ledger = ledger
+        self._sat = sat
+
+    budget = _byte_lane("bytes_budget")
+    requested = _byte_lane("bytes_requested")
+    spent = _byte_lane("bytes_spent")
+
+
+class FleetLedger:
+    """Stacked per-satellite budget state of a constellation.
+
+    One (n_sats,) float64 array per activity class instead of N scalar
+    :class:`EnergyLedger` objects — fleet-wide grants and charges are
+    single vectorized ops, and per-lane IEEE arithmetic is identical to
+    the scalar ledger (each lane sees the same sequence of float64
+    operations), so fleet execution stays bit-equal to looped Missions.
+    Byte ledgers (offered / requested / spent downlink bytes) ride in
+    the same object. ``energy_view(i)`` / ``bytes_view(i)`` expose
+    Mission-compatible scalar views of lane ``i``.
+    """
+
+    def __init__(self, n_sats: int):
+        self.n_sats = int(n_sats)
+        z = lambda: np.zeros(self.n_sats, np.float64)  # noqa: E731
+        self.budget_j = z()
+        self.e_cap = z()
+        self.e_com = z()
+        self.e_agg = z()
+        self.e_down = z()
+        self.bytes_budget = z()
+        self.bytes_requested = z()
+        self.bytes_spent = z()
+
+    # -- vectorized grants/spends (fleet-batched stages) --------------------
+
+    @property
+    def spent(self) -> np.ndarray:
+        return self.e_cap + self.e_com + self.e_agg + self.e_down
+
+    @property
+    def remaining(self) -> np.ndarray:
+        return np.maximum(self.budget_j - self.spent, 0.0)
+
+    def grant(self, j):
+        """Add per-satellite harvested energy (``j``: scalar or (n_sats,))."""
+        self.budget_j += j
+
+    def charge_capture(self, n_images, j_per_image: float = 0.05):
+        self.e_cap += np.asarray(n_images, np.float64) * j_per_image
+
+    def charge_compute(self, n_tiles, gflops_per_tile: float,
+                       profile: DeviceProfile):
+        self.e_com += (np.asarray(n_tiles, np.float64) * gflops_per_tile
+                       * profile.joules_per_gflop)
+
+    def charge_aggregate(self, n_ops, j_per_op: float = 1e-6):
+        self.e_agg += np.asarray(n_ops, np.float64) * j_per_op
+
+    def charge_downlink(self, n_bytes, bandwidth_mbps: float):
+        seconds = np.asarray(n_bytes, np.float64) * 8.0 / (bandwidth_mbps * 1e6)
+        self.e_down += seconds * RADIO_POWER_W
+
+    # -- per-satellite Mission-compatible views -----------------------------
+
+    def energy_view(self, sat: int) -> SatEnergyView:
+        return SatEnergyView(self, sat)
+
+    def bytes_view(self, sat: int) -> SatBytesView:
+        return SatBytesView(self, sat)
+
+
+def max_tiles_within_budget_vec(budget_j, gflops_per_tile: float,
+                                profile: DeviceProfile) -> np.ndarray:
+    """Vectorized :func:`max_tiles_within_budget` over stacked budgets.
+
+    Quotients are clamped below 2**62 before the integer cast — unlike
+    Python's arbitrary-precision ``int()``, ``astype(int64)`` would wrap
+    an astronomical grant to a NEGATIVE cap and silently process zero
+    tiles. The clamp exceeds any real tile count, so caps stay
+    effectively unbounded (and fleet/oracle-identical) either way.
+    """
+    budget_j = np.asarray(budget_j, np.float64)
+    if gflops_per_tile <= 0:
+        return np.zeros(budget_j.shape, np.int64)
+    q = budget_j / (gflops_per_tile * profile.joules_per_gflop)
+    return np.minimum(q, np.float64(2 ** 62)).astype(np.int64)
 
 
 def max_tiles_within_budget(budget_j: float, gflops_per_tile: float,

@@ -72,70 +72,59 @@ def _frame_program(imgs, tile_size: int, sp_size: int, gd_size: int):
     return tiles_sp, tiles_gd, moments, roi_std
 
 
-def prepare_frames(frames, tile_size: int, sp_size: int, gd_size: int,
-                   frame_bucket: int = FRAME_BUCKET) -> PreparedFrames:
-    """Run the fused frame program over a workload of (img, boxes, classes).
+def _bucketed_chunks(imgs, shape, tile_size: int, sp_size: int, gd_size: int,
+                     frame_bucket: int):
+    """Zero-pad a same-resolution image list to whole ``frame_bucket``s
+    and run the fused program chunk by chunk (the single definition of
+    bucket rounding/fill, shared by every capture entry point)."""
+    nb = -(-len(imgs) // frame_bucket) * frame_bucket
+    arr = np.zeros((nb, *shape), np.float32)
+    for j, img in enumerate(imgs):
+        arr[j] = img
+    return [_frame_program(jnp.asarray(arr[c0:c0 + frame_bucket]),
+                           tile_size, sp_size, gd_size)
+            for c0 in range(0, nb, frame_bucket)]
 
-    Frames are grouped by resolution and processed in fixed-size buckets
-    (zero-padded), so the number of compiled programs is bounded by the
-    number of distinct frame shapes — not by workload size. Ground-truth
-    counts are collected host-side alongside.
-    """
-    from repro.data.synthetic import tile_counts
 
-    if not frames:
-        n_pad = bucket_size(0)
-        return PreparedFrames(
-            tiles_sp=jnp.zeros((n_pad, sp_size, sp_size, 3), jnp.float32),
-            tiles_gd=jnp.zeros((n_pad, gd_size, gd_size, 3), jnp.float32),
-            moments=jnp.zeros((n_pad, 9), jnp.float32),
-            roi_std=np.zeros(0), true=np.zeros(0, np.float64), n=0)
-
+def _per_frame_pieces(frames, tile_size: int, sp_size: int, gd_size: int,
+                      frame_bucket: int):
+    """Run the fused frame program grouped by resolution; return the
+    (tiles_sp, tiles_gd, moments, roi_std) piece of EVERY frame, in
+    input order. Each frame's piece is a pure function of that frame
+    alone (the program is per-sample), so any regrouping of frames into
+    buckets yields bit-identical pieces."""
     groups: dict = {}
     for i, (img, _, _) in enumerate(frames):
         groups.setdefault(np.asarray(img).shape, []).append(i)
-
-    parts = []  # (tiles_sp, tiles_gd, moments, roi_std) pieces, frame order
-    n = 0
-    if len(groups) == 1:
-        # common case (one frame resolution): chunk outputs are already in
-        # frame order — pad frames land at the tail and fold into the tile
-        # padding below, so no per-frame reassembly is needed
-        (shape, idxs), = groups.items()
-        nb = -(-len(idxs) // frame_bucket) * frame_bucket
-        arr = np.zeros((nb, *shape), np.float32)
+    per_frame = [None] * len(frames)
+    for shape, idxs in groups.items():
+        chunks = _bucketed_chunks([frames[i][0] for i in idxs], shape,
+                                  tile_size, sp_size, gd_size, frame_bucket)
+        ntile = chunks[0][0].shape[0] // frame_bucket
         for j, i in enumerate(idxs):
-            arr[j] = frames[i][0]
-        for c0 in range(0, nb, frame_bucket):
-            parts.append(_frame_program(jnp.asarray(arr[c0:c0 + frame_bucket]),
-                                        tile_size, sp_size, gd_size))
-        ntile = parts[0][0].shape[0] // frame_bucket
-        n = ntile * len(idxs)
-    else:
-        per_frame = [None] * len(frames)
-        for shape, idxs in groups.items():
-            nb = -(-len(idxs) // frame_bucket) * frame_bucket
-            arr = np.zeros((nb, *shape), np.float32)
-            for j, i in enumerate(idxs):
-                arr[j] = frames[i][0]
-            chunks = []
-            for c0 in range(0, nb, frame_bucket):
-                chunks.append(_frame_program(
-                    jnp.asarray(arr[c0:c0 + frame_bucket]),
-                    tile_size, sp_size, gd_size))
-            ntile = chunks[0][0].shape[0] // frame_bucket
-            for j, i in enumerate(idxs):
-                ck, off = chunks[j // frame_bucket], (j % frame_bucket) * ntile
-                per_frame[i] = tuple(a[off:off + ntile] for a in ck)
-        parts = per_frame
+            ck, off = chunks[j // frame_bucket], (j % frame_bucket) * ntile
+            per_frame[i] = tuple(a[off:off + ntile] for a in ck)
+    return per_frame
+
+
+def _assemble(parts, frames, tile_size: int, roi_std: np.ndarray = None,
+              n: int = None) -> PreparedFrames:
+    """Per-frame pieces (input order) -> one bucket-padded PreparedFrames.
+
+    ``roi_std``: optional precomputed host copy of the (n,) ROI stddev
+    rows (the multi-workload path transfers the fleet's roi_std in one
+    device->host copy and hands out slices). ``n``: explicit real tile
+    count when the pieces carry trailing pad-frame rows (the
+    single-resolution fast paths pass whole program chunks)."""
+    from repro.data.synthetic import tile_counts
+
+    if n is None:
         n = sum(p[0].shape[0] for p in parts)
 
     def cat(j):
         return parts[0][j] if len(parts) == 1 else jnp.concatenate(
             [p[j] for p in parts])
 
-    # zero-pad to a power-of-two tile bucket: downstream gathers and
-    # counting batches then compile per bucket, never per workload size
     n_pad = bucket_size(n)
 
     def pad(a):
@@ -149,9 +138,108 @@ def prepare_frames(frames, tile_size: int, sp_size: int, gd_size: int,
     tiles_sp = pad(cat(0))
     tiles_gd = pad(cat(1))
     moments = pad(cat(2))
-    roi_std = np.asarray(pad(cat(3)))[:n]
+    if roi_std is None:
+        roi_std = np.asarray(pad(cat(3)))[:n]
     true = np.concatenate([
         tile_counts(boxes, np.asarray(img).shape[0], tile_size)
         for img, boxes, _ in frames
     ]).astype(np.float64)
     return PreparedFrames(tiles_sp, tiles_gd, moments, roi_std, true, n)
+
+
+def _empty_prepared(sp_size: int, gd_size: int) -> PreparedFrames:
+    n_pad = bucket_size(0)
+    return PreparedFrames(
+        tiles_sp=jnp.zeros((n_pad, sp_size, sp_size, 3), jnp.float32),
+        tiles_gd=jnp.zeros((n_pad, gd_size, gd_size, 3), jnp.float32),
+        moments=jnp.zeros((n_pad, 9), jnp.float32),
+        roi_std=np.zeros(0), true=np.zeros(0, np.float64), n=0)
+
+
+def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
+                         gd_size: int,
+                         frame_bucket: int = FRAME_BUCKET):
+    """Constellation-batched capture: N independent frame workloads (one
+    per satellite) flow through SHARED frame buckets of the fused
+    program, then split back into one :class:`PreparedFrames` per
+    workload.
+
+    Per-workload outputs are bit-identical (real rows) to calling
+    :func:`prepare_frames` on each workload alone — the fused program is
+    per-sample, so bucket composition never perturbs a frame's tiles —
+    but the padded-bucket cost is paid once across the fleet instead of
+    once per satellite: 8 satellites with 2 frames each run 4 full
+    buckets instead of 8 half-empty ones.
+    """
+    flat = [f for w in workloads for f in w]
+    if not flat:
+        return [_empty_prepared(sp_size, gd_size) for _ in workloads]
+
+    shapes = {np.asarray(img).shape for img, _, _ in flat}
+    if len(shapes) == 1:
+        # common case (one frame resolution fleet-wide): run the shared
+        # buckets once and hand each workload a contiguous slice of the
+        # chunk outputs — no per-frame device slicing
+        (shape,) = shapes
+        chunks = _bucketed_chunks([img for img, _, _ in flat], shape,
+                                  tile_size, sp_size, gd_size, frame_bucket)
+        ntile = chunks[0][0].shape[0] // frame_bucket
+        if len(chunks) == 1:
+            cat = list(chunks[0])
+        else:
+            cat = [jnp.concatenate([ck[j] for ck in chunks])
+                   for j in range(len(chunks[0]))]
+        roi_all = np.asarray(cat[3])  # ONE device->host copy for the fleet
+        out, pos = [], 0
+        for w in workloads:
+            if not w:
+                out.append(_empty_prepared(sp_size, gd_size))
+                continue
+            parts = [tuple(a[pos * ntile:(pos + len(w)) * ntile] for a in cat)]
+            roi = roi_all[pos * ntile:(pos + len(w)) * ntile]
+            pos += len(w)
+            out.append(_assemble(parts, w, tile_size, roi_std=roi))
+        return out
+
+    per_frame = _per_frame_pieces(flat, tile_size, sp_size, gd_size,
+                                  frame_bucket)
+    out, pos = [], 0
+    for w in workloads:
+        if not w:
+            out.append(_empty_prepared(sp_size, gd_size))
+            continue
+        parts = per_frame[pos:pos + len(w)]
+        pos += len(w)
+        out.append(_assemble(parts, w, tile_size))
+    return out
+
+
+def prepare_frames(frames, tile_size: int, sp_size: int, gd_size: int,
+                   frame_bucket: int = FRAME_BUCKET) -> PreparedFrames:
+    """Run the fused frame program over a workload of (img, boxes, classes).
+
+    Frames are grouped by resolution and processed in fixed-size buckets
+    (zero-padded), so the number of compiled programs is bounded by the
+    number of distinct frame shapes — not by workload size. Ground-truth
+    counts are collected host-side alongside.
+    """
+    if not frames:
+        return _empty_prepared(sp_size, gd_size)
+
+    groups: dict = {}
+    for i, (img, _, _) in enumerate(frames):
+        groups.setdefault(np.asarray(img).shape, []).append(i)
+
+    if len(groups) == 1:
+        # common case (one frame resolution): chunk outputs are already in
+        # frame order — pad frames land at the tail and fold into
+        # _assemble's tile padding, so no per-frame reassembly is needed
+        (shape, idxs), = groups.items()
+        parts = _bucketed_chunks([frames[i][0] for i in idxs], shape,
+                                 tile_size, sp_size, gd_size, frame_bucket)
+        ntile = parts[0][0].shape[0] // frame_bucket
+        return _assemble(parts, frames, tile_size, n=ntile * len(idxs))
+
+    parts = _per_frame_pieces(frames, tile_size, sp_size, gd_size,
+                              frame_bucket)
+    return _assemble(parts, frames, tile_size)

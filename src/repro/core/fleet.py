@@ -1,0 +1,406 @@
+"""Fleet engine: vectorized constellation-scale Mission execution.
+
+A :class:`Fleet` owns the persistent budget state of N satellites as
+STACKED arrays (one :class:`~repro.core.energy.FleetLedger` instead of N
+scalar ledgers) and executes the Mission ingest stages for the whole
+constellation through shared compiled programs:
+
+* **Capture** — frames from all satellites flow through the same fused
+  frame-program buckets (:func:`repro.core.engine.prepare_frames_multi`),
+  so 8 satellites with 2 frames each run 4 full buckets instead of 8
+  half-empty ones.
+* **Admission** — day-fraction energy grants and capture charges are one
+  vectorized ledger op across the fleet.
+* **OnboardCount** — every satellite's representative set is counted in
+  shared fixed-shape forward batches
+  (:func:`repro.core.cascade.count_tiles_multi`): the 64-slot padding of
+  the counting program is paid once per fleet-round, not once per
+  satellite.
+
+RoiFilter / Dedup / Select stay per-satellite (clustering and selection
+couple tiles only within one satellite) but reuse the bucketed compiled
+programs, which are shared across the fleet by construction.
+
+Contact rounds batch too: Select + Downlink run strictly FIFO per
+window (the byte budget drains segment by segment), then the ground
+recounts of every window in the round share counting batches, and
+Aggregate runs last — a reordering that is exact because GroundRecount
+and Aggregate read only their own segment's selection.
+
+The executed arithmetic is IDENTICAL to running N independent
+:class:`~repro.core.mission.Mission` objects: every batched program is
+per-sample, ledger lanes are independent float64 sequences, and the
+per-satellite stages are literally Mission's. ``tests/test_fleet.py``
+enforces exact equality of per-tile predictions and summaries against
+the looped-Mission oracle (:func:`run_scenario` with ``fleet=False``)
+for all registered policies.
+
+Contact windows rotate: :meth:`Fleet.contact_round` serves the next
+``stations`` satellites round-robin (or an explicit ``windows`` list
+from a :class:`~repro.data.scenarios.FleetScenario`), each draining its
+pending passes FIFO through its policy's selection.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.cascade import count_tiles_multi
+from repro.core.energy import (FleetLedger, max_tiles_within_budget,
+                               max_tiles_within_budget_vec)
+from repro.core.mission import (Aggregate, Capture, Dedup, Downlink,
+                                GroundRecount, IngestReport, Mission,
+                                OnboardCount, RoiFilter, Segment, Select,
+                                WindowReport)
+from repro.core.pipeline import PipelineConfig, PipelineResult
+
+_DEFAULT_INGEST_GRAPH = (Capture, RoiFilter, Dedup, OnboardCount)
+_DEFAULT_CONTACT_GRAPH = (Select, Downlink, GroundRecount, Aggregate)
+
+
+class Fleet:
+    """N-satellite constellation over one counter pair.
+
+    Parameters
+    ----------
+    space, ground : (params, cfg) counter pairs shared by the fleet.
+    pcfg : one :class:`PipelineConfig` (replicated) or a sequence of N
+        per-satellite configs — policies/methods may differ per
+        satellite; ``use_engine`` or a custom stage graph falls that
+        satellite back to its Mission's sequential ingest.
+    n_sats : fleet size when ``pcfg`` is a single config.
+    energy_cfgs : as for :class:`Mission` (compute pricing), shared.
+    """
+
+    def __init__(self, space, ground, pcfg=None, n_sats: Optional[int] = None,
+                 energy_cfgs=None):
+        if isinstance(pcfg, (list, tuple)):
+            pcfgs = list(pcfg)
+            if n_sats is not None and n_sats != len(pcfgs):
+                raise ValueError(
+                    f"n_sats={n_sats} conflicts with {len(pcfgs)} "
+                    f"per-satellite configs")
+            n_sats = len(pcfgs)
+        else:
+            n_sats = 1 if n_sats is None else n_sats
+            pcfgs = [pcfg if pcfg is not None else PipelineConfig()
+                     for _ in range(n_sats)]
+        if n_sats < 1:
+            raise ValueError("a fleet needs at least one satellite")
+        self.n_sats = n_sats
+        self.space = space
+        self.ground = ground
+        self.missions = [Mission(space, ground, p, energy_cfgs=energy_cfgs)
+                         for p in pcfgs]
+        # swap every Mission's scalar ledgers for lanes of ONE stacked
+        # fleet ledger: budget state lives in (n_sats,) arrays, and the
+        # ground-side Mission stages keep working unmodified via views
+        self.ledger = FleetLedger(n_sats)
+        for i, m in enumerate(self.missions):
+            m.ledger = self.ledger.energy_view(i)
+            m.bytes_ledger = self.ledger.bytes_view(i)
+        self._station = 0  # rotating contact-window pointer
+        self._batchable = [self._can_batch(m) for m in self.missions]
+        self._contact_batchable = [self._can_batch_contact(m)
+                                   for m in self.missions]
+
+    @staticmethod
+    def _can_batch(m: Mission) -> bool:
+        return (m.pcfg.use_engine
+                and tuple(type(s) for s in m.ingest_stages)
+                == _DEFAULT_INGEST_GRAPH)
+
+    @staticmethod
+    def _can_batch_contact(m: Mission) -> bool:
+        return (m.pcfg.use_engine
+                and tuple(type(s) for s in m.contact_stages)
+                == _DEFAULT_CONTACT_GRAPH)
+
+    # -- streaming API ------------------------------------------------------
+
+    def ingest(self, frames_per_sat: Sequence,
+               energy_budgets_j: Optional[Sequence] = None
+               ) -> List[IngestReport]:
+        """One orbital pass for every satellite, constellation-batched.
+
+        ``frames_per_sat[i]`` is satellite *i*'s frame list for this
+        round (may be empty); ``energy_budgets_j[i]`` optionally
+        overrides its harvest grant (eclipse/sunlit profiles). Returns
+        per-satellite :class:`IngestReport`\\ s identical to calling
+        ``Mission.ingest`` satellite by satellite.
+        """
+        if len(frames_per_sat) != self.n_sats:
+            raise ValueError(
+                f"expected {self.n_sats} frame lists, got {len(frames_per_sat)}")
+        if energy_budgets_j is None:
+            energy_budgets_j = [None] * self.n_sats
+        elif len(energy_budgets_j) != self.n_sats:
+            raise ValueError(
+                f"expected {self.n_sats} energy budgets, "
+                f"got {len(energy_budgets_j)}")
+        reports: List[Optional[IngestReport]] = [None] * self.n_sats
+
+        batched = [i for i in range(self.n_sats)
+                   if self._batchable[i] and frames_per_sat[i]]
+        for i in range(self.n_sats):
+            if i not in batched:
+                # empty passes and non-default graphs take the exact
+                # sequential Mission path
+                reports[i] = self.missions[i].ingest(
+                    frames_per_sat[i], energy_budget_j=energy_budgets_j[i])
+        if batched:
+            self._ingest_batched(batched, frames_per_sat, energy_budgets_j,
+                                 reports)
+        return reports  # type: ignore[return-value]
+
+    def _ingest_batched(self, sats, frames_per_sat, energy_budgets_j,
+                        reports):
+        sp_size = self.space[1].input_size
+        gd_size = self.ground[1].input_size
+
+        # --- Capture.prepare: shared frame buckets across the fleet ---
+        segs: Dict[int, Segment] = {}
+        by_tile: Dict[int, List[int]] = {}
+        for i in sats:
+            by_tile.setdefault(self.missions[i].pcfg.tile_size, []).append(i)
+        for tile_size, ids in by_tile.items():
+            preps = engine.prepare_frames_multi(
+                [frames_per_sat[i] for i in ids], tile_size, sp_size, gd_size)
+            for i, prep in zip(ids, preps):
+                seg = Segment(frames=list(frames_per_sat[i]),
+                              energy_grant_override=energy_budgets_j[i])
+                seg.prep = prep
+                seg.tiles_sp, seg.tiles_gd = prep.tiles_sp, prep.tiles_gd
+                seg.true, seg.n = prep.true, prep.n
+                segs[i] = seg
+
+        # --- Capture.admit, with the ledger ops lifted out: the fleet
+        # grants every satellite's entitlement in one vectorized op ---
+        evec = np.zeros(self.n_sats, np.float64)
+        fvec = np.zeros(self.n_sats, np.float64)
+        for i in sats:
+            m, seg = self.missions[i], segs[i]
+            evec[i] = Capture.entitle(m, seg)
+            fvec[i] = len(seg.frames)
+            Capture.init_state(m, seg)
+        self.ledger.grant(evec)
+        self.ledger.charge_capture(fvec)
+
+        # --- RoiFilter + Dedup: per-satellite, shared compiled buckets ---
+        for i in sats:
+            m, seg = self.missions[i], segs[i]
+            m.ingest_stages[1].run(m, seg)  # RoiFilter
+            m.ingest_stages[2].run(m, seg)  # Dedup (charges aggregate)
+
+        # --- OnboardCount: fleet-shared fixed-shape counting batches ---
+        self._onboard_count_batched([i for i in sats
+                                     if self.missions[i].policy.wants_onboard],
+                                    segs)
+
+        for i in sats:
+            m, seg = self.missions[i], segs[i]
+            m._segments.append(seg)
+            m._pending.append(seg)
+            m._finalized = False
+            reports[i] = IngestReport(
+                n_frames=len(seg.frames), n_tiles=seg.n,
+                tiles_processed_space=seg.n_processed,
+                energy_granted_j=seg.energy_granted_j,
+                energy_remaining_j=m.ledger.remaining,
+                byte_entitlement=seg.byte_entitlement)
+
+    def _onboard_count_batched(self, sats, segs):
+        """Mission.OnboardCount semantics, with every satellite's
+        energy-capped representative set counted in shared batches."""
+        if not sats:
+            return
+        # energy caps and compute spends are vectorized over the stacked
+        # ledger when the fleet shares one pricing profile (lanes are
+        # independent, so reading all caps before charging is exact);
+        # heterogeneous hardware falls back to identical per-lane floats
+        profiles = {(self.missions[i].gflops_space,
+                     self.missions[i].pcfg.hardware) for i in sats}
+        uniform = len(profiles) == 1
+        caps = None
+        if uniform:
+            (gflops, hw), = profiles
+            caps = max_tiles_within_budget_vec(self.ledger.remaining * 0.95,
+                                               gflops, hw)
+        process: Dict[int, np.ndarray] = {}
+        nproc = np.zeros(self.n_sats, np.float64)
+        for i in sats:
+            m, seg = self.missions[i], segs[i]
+            reps = np.unique(seg.rep_of[seg.active])
+            cap = (int(caps[i]) if caps is not None else
+                   max_tiles_within_budget(m.ledger.remaining * 0.95,
+                                           m.gflops_space, m.pcfg.hardware))
+            process[i] = reps[:cap] if len(reps) > cap else reps
+            seg.n_processed = len(process[i])
+            nproc[i] = seg.n_processed
+        if uniform:
+            self.ledger.charge_compute(nproc, gflops, hw)
+        else:
+            for i in sats:
+                m = self.missions[i]
+                m.ledger.charge_compute(segs[i].n_processed, m.gflops_space,
+                                        m.pcfg.hardware)
+
+        # shared-batch forward per distinct (score_thresh,) group
+        by_thresh: Dict[float, List[int]] = {}
+        for i in sats:
+            by_thresh.setdefault(self.missions[i].pcfg.score_thresh,
+                                 []).append(i)
+        params, cfg = self.space
+        for thresh, ids in by_thresh.items():
+            parts = [(segs[i].tiles_sp, process[i]) for i in ids]
+            results = count_tiles_multi(params, cfg, parts,
+                                        score_thresh=thresh)
+            for i, (c, f) in zip(ids, results):
+                seg = segs[i]
+                counts_sp = np.zeros(seg.n)
+                conf = np.full(seg.n, -1.0)
+                if seg.n_processed:
+                    counts_sp[process[i]] = c
+                    conf[process[i]] = f
+                seg.counts_sp = counts_sp[seg.rep_of]
+                seg.conf = conf[seg.rep_of]
+                seg.processed = np.isin(seg.rep_of, process[i]) & seg.active
+
+    def contact_round(self, windows: Optional[Sequence[Tuple[int, float]]]
+                      = None, stations: int = 1,
+                      budget_bytes: Optional[float] = None
+                      ) -> List[Tuple[int, WindowReport]]:
+        """One ground-contact round.
+
+        Default: the next ``stations`` satellites (round-robin from the
+        rotating pointer) each get a window of ``budget_bytes`` (None =
+        their pending entitlement); with more stations than satellites
+        the rotation wraps, so a satellite can get several windows in
+        one round. Pass explicit ``windows`` as
+        ``[(sat, budget_bytes), ...]`` — e.g. a scenario round's contact
+        events — to override the rotation. Each window drains that
+        satellite's pending passes FIFO through its selection policy.
+        Returns ``[(sat, WindowReport), ...]`` in window order (a
+        satellite may get several windows in one round).
+        """
+        if windows is None:
+            windows = []
+            for _ in range(stations):
+                windows.append((self._station, budget_bytes))
+                self._station = (self._station + 1) % self.n_sats
+        # Select + Downlink stay strictly FIFO per window (the byte
+        # budget drains segment by segment); the ground recounts of ALL
+        # windows in the round are then counted in shared batches, and
+        # Aggregate runs last. Reordering is exact: GroundRecount and
+        # Aggregate read only their own segment's selection.
+        out: List[Optional[Tuple[int, WindowReport]]] = []
+        jobs = []  # (slot, sat, mission, window, segs)
+        for sat, budget in windows:
+            m = self.missions[sat]
+            if not self._contact_batchable[sat]:
+                out.append((sat, m.contact_window(budget)))
+                continue
+            if m._window_is_noop():
+                out.append((sat, m._drained_window_report()))
+                continue
+            segs, window = m._open_window(budget)
+            for seg in segs:
+                m.contact_stages[0].run(m, seg, window)  # Select
+                m.contact_stages[1].run(m, seg, window)  # Downlink
+            out.append(None)  # filled after the batched recount
+            jobs.append((len(out) - 1, sat, m, window, segs))
+
+        by_thresh: Dict[float, list] = {}
+        for _, sat, m, window, segs in jobs:
+            for seg in segs:
+                by_thresh.setdefault(m.pcfg.score_thresh, []).append((m, seg))
+        params, cfg = self.ground
+        for thresh, items in by_thresh.items():
+            parts = [(seg.tiles_gd, seg.selection.downlink)
+                     for _, seg in items]
+            results = count_tiles_multi(params, cfg, parts,
+                                        score_thresh=thresh)
+            for (m, seg), (c, _) in zip(items, results):
+                counts_gd = np.zeros(seg.n)
+                down = seg.selection.downlink
+                if len(down):
+                    counts_gd[down] = c
+                seg.counts_gd = counts_gd[seg.rep_of]
+
+        for slot, sat, m, window, segs in jobs:
+            for seg in segs:
+                m.contact_stages[3].run(m, seg, window)  # Aggregate
+            out[slot] = (sat, m._window_report(window, segs))
+        return out
+
+    def finalize(self) -> List[PipelineResult]:
+        """Flush every satellite's pending passes through zero-byte
+        windows (onboard results land, nothing transmits) in one batched
+        contact round, then aggregate per satellite."""
+        pend = [i for i in range(self.n_sats) if self.missions[i]._pending]
+        if pend:
+            self.contact_round(windows=[(i, 0.0) for i in pend])
+        for m in self.missions:
+            m._finalized = True
+        return self.results()
+
+    def results(self) -> List[PipelineResult]:
+        return [m.result() for m in self.missions]
+
+    @property
+    def pending_segments(self) -> List[int]:
+        return [m.pending_segments for m in self.missions]
+
+    def summary(self) -> dict:
+        """Fleet-aggregate scalars (per-satellite results summed)."""
+        rs = self.results()
+        return {
+            "n_sats": self.n_sats,
+            "total_true": sum(r.total_true for r in rs),
+            "total_pred": sum(r.total_pred for r in rs),
+            "tiles_total": sum(r.tiles_total for r in rs),
+            "tiles_processed_space": sum(r.tiles_processed_space for r in rs),
+            "tiles_downlinked": sum(r.tiles_downlinked for r in rs),
+            "bytes_spent": float(self.ledger.bytes_spent.sum()),
+            "bytes_budget": float(self.ledger.bytes_budget.sum()),
+            "energy_spent_j": float(self.ledger.spent.sum()),
+            "energy_budget_j": float(self.ledger.budget_j.sum()),
+        }
+
+
+def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
+                 energy_cfgs=None):
+    """Execute a :class:`~repro.data.scenarios.FleetScenario`.
+
+    ``fleet=True`` runs the constellation-batched :class:`Fleet` path;
+    ``fleet=False`` runs the looped-Mission parity oracle — one
+    sequential ``Mission`` per satellite fed the identical event order.
+    Returns ``(per_sat_results, driver)`` where ``driver`` is the Fleet
+    or the Mission list.
+    """
+    n = scenario.spec.n_sats
+    if fleet:
+        fl = Fleet(space, ground, pcfg, n_sats=n, energy_cfgs=energy_cfgs)
+        for rnd in scenario.rounds:
+            fl.ingest(rnd.frames_per_sat(n), rnd.harvest_per_sat(n))
+            if rnd.contacts:
+                fl.contact_round(windows=[(c.sat, c.budget_bytes)
+                                          for c in rnd.contacts])
+        return fl.finalize(), fl
+    pcfgs = (list(pcfg) if isinstance(pcfg, (list, tuple))
+             else [pcfg] * n)
+    if len(pcfgs) != n:
+        raise ValueError(f"{len(pcfgs)} per-satellite configs for an "
+                         f"{n}-satellite scenario")
+    missions = [Mission(space, ground, p, energy_cfgs=energy_cfgs)
+                for p in pcfgs]
+    for rnd in scenario.rounds:
+        frames = rnd.frames_per_sat(n)
+        harvest = rnd.harvest_per_sat(n)
+        for i in range(n):
+            missions[i].ingest(frames[i], energy_budget_j=harvest[i])
+        for c in rnd.contacts:
+            missions[c.sat].contact_window(c.budget_bytes)
+    return [m.finalize() for m in missions], missions

@@ -43,7 +43,7 @@ import numpy as np
 import repro.core.dedup as dd
 from repro.core import engine
 from repro.core.cascade import count_tiles_batched, count_tiles_batched_ref
-from repro.core.energy import (EnergyLedger, detector_gflops,
+from repro.core.energy import (ByteLedger, EnergyLedger, detector_gflops,
                                max_tiles_within_budget)
 from repro.core.metrics import cmae
 from repro.core.pipeline import PipelineConfig, PipelineResult, budgets_for
@@ -124,11 +124,21 @@ class Stage:
 
 class Capture(Stage):
     """Tile + resize + moments (engine path: one fused device program),
-    collect ground truth, and grant this slice's day-fraction budgets."""
+    collect ground truth, and grant this slice's day-fraction budgets.
+
+    Split into :meth:`prepare` (tiles/truth) and :meth:`admit` (budget
+    grant + per-tile state init) so the fleet engine can substitute a
+    constellation-batched prepare (shared frame buckets across
+    satellites) and still run the exact admission arithmetic.
+    """
 
     name = "capture"
 
     def run(self, mission, seg, window=None):
+        self.prepare(mission, seg)
+        self.admit(mission, seg)
+
+    def prepare(self, mission, seg):
         pcfg = mission.pcfg
         sp_cfg = mission.space[1]
         gd_cfg = mission.ground[1]
@@ -163,15 +173,27 @@ class Capture(Stage):
             seg.true = np.concatenate(true).astype(np.float64)
             seg.n = seg.tiles_sp.shape[0]
 
-        energy, byte_budget, _ = budgets_for(pcfg, seg.n)
+    def admit(self, mission, seg):
+        energy = self.entitle(mission, seg)
+        mission.ledger.grant(energy)
+        mission.ledger.charge_capture(len(seg.frames))
+        self.init_state(mission, seg)
+
+    @staticmethod
+    def entitle(mission, seg) -> float:
+        """Record the slice's day-fraction entitlements on the segment;
+        returns the energy grant (the fleet engine grants a whole
+        constellation's entitlements in one vectorized ledger op)."""
+        energy, byte_budget, _ = budgets_for(mission.pcfg, seg.n)
         if seg.energy_grant_override is not None:
             energy = float(seg.energy_grant_override)
         seg.energy_granted_j = energy
         seg.byte_entitlement = byte_budget
-        mission.ledger.grant(energy)
-        mission.ledger.charge_capture(len(seg.frames))
-        mission.frames_seen += len(seg.frames)
+        return energy
 
+    @staticmethod
+    def init_state(mission, seg):
+        mission.frames_seen += len(seg.frames)
         seg.active = np.ones(seg.n, bool)
         seg.rep_of = np.arange(seg.n)
         seg.conf = np.full(seg.n, -1.0)
@@ -285,8 +307,8 @@ class Downlink(Stage):
             window.remaining -= spend
         seg.bytes_requested = sel.bytes_requested
         seg.bytes_spent = spend
-        mission.bytes_requested += sel.bytes_requested
-        mission.bytes_spent += spend
+        mission.bytes_ledger.requested += sel.bytes_requested
+        mission.bytes_ledger.spent += spend
 
 
 class GroundRecount(Stage):
@@ -353,10 +375,9 @@ class Mission:
         self.policy = get_policy(self.pcfg.method)
         self.tile_bytes = float(self.pcfg.real_tile_px ** 2 * 3)
         self.ledger = EnergyLedger(budget_j=0.0)
-        self.bytes_budget = 0.0     # bytes offered across contact windows
-        self.bytes_requested = 0.0  # bytes policies asked to transmit
-        self.bytes_spent = 0.0      # bytes actually charged (<= budget)
+        self.bytes_ledger = ByteLedger()
         self.frames_seen = 0
+        self._finalized = False
         self.ingest_stages = (list(ingest_stages) if ingest_stages is not None
                               else default_ingest_stages())
         self.contact_stages = (list(contact_stages)
@@ -364,6 +385,23 @@ class Mission:
                                else default_contact_stages())
         self._segments: List[Segment] = []  # ingest order
         self._pending: List[Segment] = []   # awaiting a contact window
+
+    # byte-ledger views (the stacked fleet ledger swaps in its own
+    # bytes_ledger; these names stay stable for drivers/examples)
+    @property
+    def bytes_budget(self) -> float:
+        """Bytes offered across contact windows."""
+        return self.bytes_ledger.budget
+
+    @property
+    def bytes_requested(self) -> float:
+        """Bytes the policies asked to transmit."""
+        return self.bytes_ledger.requested
+
+    @property
+    def bytes_spent(self) -> float:
+        """Bytes actually charged (<= budget)."""
+        return self.bytes_ledger.spent
 
     # -- streaming API ------------------------------------------------------
 
@@ -374,6 +412,7 @@ class Mission:
         ``energy_budget_j``) to the persistent ledger first; onboard
         counting then runs under whatever energy remains mission-wide.
         """
+        self._finalized = False
         seg = Segment(frames=list(frames),
                       energy_grant_override=energy_budget_j)
         for stage in self.ingest_stages:
@@ -391,16 +430,43 @@ class Mission:
         """Drain pending segments through the ground-side stages within
         one window's byte budget (default: the pending segments'
         accumulated entitlement). Segments are served FIFO; unspent
-        budget flows to later segments in the same window."""
+        budget flows to later segments in the same window.
+
+        After :meth:`finalize` (and before any new ingest) this is a
+        no-op: the mission is drained, so an offered window neither
+        flushes anything nor inflates the byte-budget accounting."""
+        if self._window_is_noop():
+            return self._drained_window_report()
+        segs, window = self._open_window(budget_bytes)
+        for seg in segs:
+            for stage in self.contact_stages:
+                stage.run(self, seg, window)
+        return self._window_report(window, segs)
+
+    # window protocol pieces, shared with the fleet engine's batched
+    # contact rounds so the drain/accounting rules live in ONE place
+
+    def _window_is_noop(self) -> bool:
+        return self._finalized and not self._pending
+
+    @staticmethod
+    def _drained_window_report() -> WindowReport:
+        return WindowReport(budget_bytes=0.0, bytes_requested=0.0,
+                            bytes_spent=0.0, tiles_downlinked=0, segments=0)
+
+    def _open_window(self, budget_bytes):
+        """Pop the pending segments and accrue one window's byte budget
+        (default: the pending segments' accumulated entitlement)."""
         segs, self._pending = self._pending, []
         if budget_bytes is None:
             budget_bytes = sum(s.byte_entitlement for s in segs)
         window = ContactWindow(budget=float(budget_bytes),
                                remaining=float(budget_bytes))
-        self.bytes_budget += window.budget
-        for seg in segs:
-            for stage in self.contact_stages:
-                stage.run(self, seg, window)
+        self.bytes_ledger.budget += window.budget
+        return segs, window
+
+    @staticmethod
+    def _window_report(window: ContactWindow, segs) -> WindowReport:
         return WindowReport(
             budget_bytes=window.budget,
             bytes_requested=sum(s.bytes_requested for s in segs),
@@ -419,9 +485,14 @@ class Mission:
 
     def finalize(self) -> PipelineResult:
         """Flush pending segments through a zero-byte window (onboard
-        results land, nothing transmits), then aggregate."""
+        results land, nothing transmits), then aggregate.
+
+        Idempotent: repeated calls (and :meth:`contact_window` calls in
+        between) are no-ops until a new :meth:`ingest` resumes the
+        stream."""
         if self._pending:
             self.contact_window(0.0)
+        self._finalized = True
         return self.result()
 
     def result(self) -> PipelineResult:

@@ -75,6 +75,12 @@ def throttle(conf: jnp.ndarray, sizes: jnp.ndarray, budget_bytes,
     return ThrottleResult(discard, space, downlink, dropped, bytes_used)
 
 
+# jitted entry for the hot bucketed path: one compiled program per
+# (n_pad, policy) instead of ~15 eagerly dispatched ops per call —
+# bit-identical to the eager call (enforced by tests/test_core.py)
+_throttle_jit = jax.jit(throttle, static_argnames=("policy",))
+
+
 def throttle_padded(conf, tile_bytes: float, budget_bytes, conf_p: float,
                     conf_q: float, policy: str = "dynamic_conf",
                     n_pad: int = None):
@@ -89,19 +95,29 @@ def throttle_padded(conf, tile_bytes: float, budget_bytes, conf_p: float,
     """
     n = int(np.shape(conf)[0])
     n_pad = n_pad if n_pad is not None else n
+    if n_pad < n:
+        raise ValueError(
+            f"throttle_padded: n_pad={n_pad} < n={n} would drop real tiles; "
+            f"pass a bucket >= n (n_pad == n is the no-padding boundary)")
     conf_pad = np.full(n_pad, -1.0)
     conf_pad[:n] = conf
     act = np.zeros(n_pad, bool)
     act[:n] = True
-    tr = throttle(jnp.asarray(conf_pad), jnp.full(n_pad, tile_bytes),
-                  budget_bytes, conf_p, conf_q, policy,
-                  active=jnp.asarray(act))
+    tr = _throttle_jit(jnp.asarray(conf_pad), jnp.full(n_pad, tile_bytes),
+                       float(budget_bytes), conf_p, conf_q, policy,
+                       active=jnp.asarray(act))
     return np.asarray(tr.space)[:n], np.asarray(tr.downlink)[:n]
 
 
 def contact_budget_bytes(bandwidth_mbps: float, contact_s: float) -> float:
-    """Contact-window byte budget (paper §IV-A3: e.g. 100 Mbps x 6 min)."""
-    return bandwidth_mbps * 1e6 / 8.0 * contact_s
+    """Contact-window byte budget (paper §IV-A3: e.g. 100 Mbps x 6 min).
+
+    Degenerate windows — zero or negative contact time (a pass that
+    never rises above the horizon mask) or non-positive bandwidth —
+    yield a zero budget rather than a nonsensical one (each operand is
+    clamped, so two negatives cannot multiply into a positive budget).
+    """
+    return max(bandwidth_mbps, 0.0) * 1e6 / 8.0 * max(contact_s, 0.0)
 
 
 def bandwidth_efficiency(err_baseline: float, err_system: float,

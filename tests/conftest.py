@@ -12,6 +12,39 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json snapshots from the current "
+             "pipeline instead of comparing against them")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: hypothesis-heavy property tests (deselect with -m 'not slow')")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def counters():
+    """Train-once reduced counter pair shared by the Mission/fleet/golden
+    suites (fixed seeds: every test sees identical parameters)."""
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.core.cascade import fit_counter
+    from repro.data.synthetic import SceneSpec, make_scene
+
+    spec = SceneSpec("mini", 384, (12, 18), (10, 24), cloud_fraction=0.2)
+    gen = np.random.default_rng(0)
+    scenes = [make_scene(gen, spec) for _ in range(4)]
+    sp_cfg = reduced(get_config("targetfuse-space"))
+    gd_cfg = reduced(get_config("targetfuse-ground"))
+    sp, _ = fit_counter(sp_cfg, scenes, 128, 150, jax.random.PRNGKey(0))
+    gd, _ = fit_counter(gd_cfg, scenes, 128, 300, jax.random.PRNGKey(1))
+    return (sp, sp_cfg), (gd, gd_cfg)

@@ -10,10 +10,12 @@ except ImportError:  # property tests skip; the rest of the suite runs
 
 from repro.core import tiling
 from repro.core.dedup import dedup, expanded_counts, features, kmeans
-from repro.core.energy import (ATLAS, RPI4, EnergyLedger, detector_gflops,
-                               max_tiles_within_budget)
+from repro.core.energy import (ATLAS, RPI4, EnergyLedger, FleetLedger,
+                               detector_gflops, max_tiles_within_budget,
+                               max_tiles_within_budget_vec)
 from repro.core.metrics import ap50, cmae
-from repro.core.throttle import POLICIES, contact_budget_bytes, throttle
+from repro.core.throttle import (POLICIES, contact_budget_bytes, throttle,
+                                 throttle_padded)
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +174,53 @@ def test_contact_budget():
     assert abs(b - 4.5e9) < 1e8
 
 
+def test_throttle_padded_exact_bucket_boundary():
+    """n == n_pad is the no-padding boundary: the padded wrapper must be
+    bit-identical to the raw call, and a budget of exactly k tiles must
+    admit exactly k (the cumsum <= budget edge)."""
+    rng = np.random.default_rng(3)
+    n = 64  # == the default dedup bucket floor
+    conf = rng.uniform(0.2, 0.5, n)  # all middles for p=0.1, q=0.6
+    tile_bytes = 1000.0
+    for policy in POLICIES:
+        space_p, down_p = throttle_padded(conf, tile_bytes, 7 * tile_bytes,
+                                          0.1, 0.6, policy, n_pad=n)
+        r = throttle(jnp.asarray(conf), jnp.full(n, tile_bytes),
+                     7 * tile_bytes, 0.1, 0.6, policy)
+        np.testing.assert_array_equal(space_p, np.asarray(r.space))
+        np.testing.assert_array_equal(down_p, np.asarray(r.downlink))
+        assert int(down_p.sum()) == 7  # exact-budget boundary admits k tiles
+
+
+def test_throttle_padded_pad_slots_inert():
+    """Bucket padding (n_pad > n) never changes the real slots."""
+    rng = np.random.default_rng(4)
+    conf = rng.uniform(0.0, 1.0, 19)
+    for n_pad in (19, 32, 64, 256):
+        space, down = throttle_padded(conf, 1000.0, 5000.0, 0.1, 0.6,
+                                      "dynamic_conf", n_pad=n_pad)
+        ref_s, ref_d = throttle_padded(conf, 1000.0, 5000.0, 0.1, 0.6,
+                                       "dynamic_conf", n_pad=19)
+        np.testing.assert_array_equal(space, ref_s)
+        np.testing.assert_array_equal(down, ref_d)
+
+
+def test_throttle_padded_rejects_lossy_bucket():
+    with pytest.raises(ValueError, match="n_pad=8 < n=16"):
+        throttle_padded(np.full(16, 0.5), 1000.0, 1e6, 0.1, 0.6,
+                        n_pad=8)
+
+
+def test_contact_budget_degenerate_windows():
+    """Zero/negative contact time (or bandwidth) -> zero budget, never a
+    negative one."""
+    assert contact_budget_bytes(50.0, 0.0) == 0.0
+    assert contact_budget_bytes(50.0, -360.0) == 0.0
+    assert contact_budget_bytes(-50.0, 360.0) == 0.0
+    assert contact_budget_bytes(-50.0, -360.0) == 0.0  # no sign flip
+    assert contact_budget_bytes(50.0, 360.0) > 0.0
+
+
 def test_throttle_jits():
     conf = jnp.asarray(np.random.default_rng(0).random(128), jnp.float32)
     sizes = jnp.full(128, 1000.0)
@@ -208,6 +257,51 @@ def test_ledger_accounting():
     led.charge_capture(100)
     led.charge_aggregate(1000)
     assert led.e_com + led.e_down > 0.6 * led.spent
+
+
+def test_fleet_ledger_lanes_match_scalar_ledger():
+    """The stacked fleet ledger is bit-equal to N scalar ledgers fed the
+    same per-lane op sequence — vectorized or through lane views."""
+    fleet = FleetLedger(3)
+    scalars = [EnergyLedger(budget_j=0.0) for _ in range(3)]
+    grants = np.array([100.0, 1e-3, 987.654321])
+    fleet.grant(grants)
+    fleet.charge_capture(np.array([2, 0, 7]))
+    fleet.charge_compute(np.array([5, 0, 3]), 4.2, RPI4)
+    for led, g, ni, nt in zip(scalars, grants, (2, 0, 7), (5, 0, 3)):
+        led.grant(float(g))
+        led.charge_capture(ni)
+        led.charge_compute(nt, 4.2, RPI4)
+    # scalar charges through a view hit the same lanes
+    fleet.energy_view(1).charge_downlink(1e6, 50.0)
+    scalars[1].charge_downlink(1e6, 50.0)
+    for i, led in enumerate(scalars):
+        assert fleet.budget_j[i] == led.budget_j
+        assert fleet.spent[i] == led.spent
+        assert fleet.remaining[i] == led.remaining
+        view = fleet.energy_view(i)
+        assert view.spent == led.spent and view.remaining == led.remaining
+
+
+def test_fleet_ledger_byte_views_read_write():
+    fleet = FleetLedger(2)
+    bv = fleet.bytes_view(1)
+    bv.budget += 10.0
+    bv.spent = 4.0
+    assert fleet.bytes_budget[1] == 10.0 and fleet.bytes_spent[1] == 4.0
+    assert fleet.bytes_budget[0] == 0.0
+    assert bv.requested == 0.0
+
+
+def test_max_tiles_vec_matches_scalar():
+    budgets = np.array([0.0, 1.0, 123.456, 9e4])
+    vec = max_tiles_within_budget_vec(budgets, 3.3, ATLAS)
+    for b, v in zip(budgets, vec):
+        assert int(v) == max_tiles_within_budget(float(b), 3.3, ATLAS)
+    assert (max_tiles_within_budget_vec(budgets, 0.0, ATLAS) == 0).all()
+    # astronomical grants must clamp, never wrap negative (int64 cast)
+    huge = max_tiles_within_budget_vec(np.array([1e30]), 3.3, ATLAS)
+    assert huge[0] > 0 and huge[0] >= 2 ** 61
 
 
 # ---------------------------------------------------------------------------

@@ -13,7 +13,7 @@ from repro.configs import get_config, reduced
 from repro.core import dedup as dd
 from repro.core import engine, tiling
 from repro.core.cascade import (build_target_pool, count_tiles_batched,
-                                count_tiles_batched_ref, fit_counter)
+                                count_tiles_batched_ref)
 from repro.core.pipeline import PipelineConfig, run_pipeline
 from repro.data.synthetic import (SceneSpec, boxes_to_targets,
                                   clip_boxes_to_tile, make_scene,
@@ -23,15 +23,8 @@ SPEC = SceneSpec("mini", 384, (12, 18), (10, 24), cloud_fraction=0.2)
 METHODS = ("space_only", "ground_only", "tiansuan", "kodan", "targetfuse")
 
 
-@pytest.fixture(scope="module")
-def counters():
-    rng = np.random.default_rng(0)
-    scenes = [make_scene(rng, SPEC) for _ in range(4)]
-    sp_cfg = reduced(get_config("targetfuse-space"))
-    gd_cfg = reduced(get_config("targetfuse-ground"))
-    sp, _ = fit_counter(sp_cfg, scenes, 128, 150, jax.random.PRNGKey(0))
-    gd, _ = fit_counter(gd_cfg, scenes, 128, 300, jax.random.PRNGKey(1))
-    return (sp, sp_cfg), (gd, gd_cfg)
+# `counters` comes from tests/conftest.py (session-scoped, identical
+# recipe — one training serves the engine/mission/fleet/golden suites)
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,67 @@
+"""Golden-snapshot regression tests: per-policy Mission summaries from a
+fixed-seed scenario, committed under tests/golden/. Silent numeric drift
+anywhere in the pipeline (tiling, dedup, counting, selection, budget
+arithmetic) fails loudly here.
+
+Regenerate intentionally with:
+
+    PYTHONPATH=src python -m pytest tests/test_golden.py --update-golden
+
+The snapshots pin one software/hardware stack (the repo's CI image):
+float32 conv/resize/k-means results can legitimately differ across CPU
+architectures or XLA builds, and on such a platform these tests flag
+the drift once — regenerate with the flag above after confirming the
+difference is environmental, not a pipeline regression.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.mission import Mission
+from repro.core.pipeline import PipelineConfig
+from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+METHODS = ("space_only", "ground_only", "tiansuan", "kodan", "targetfuse")
+SPEC = SceneSpec("golden", 384, (12, 18), (10, 24), cloud_fraction=0.2)
+
+
+def _scenario_frames():
+    rng = np.random.default_rng(42)
+    img, b, c = make_scene(rng, SPEC)
+    return revisit_frames(rng, img, b, c, 3)
+
+
+def _run_summary(method, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25, seed=0)
+    m = Mission(space, ground, pcfg)
+    m.ingest(_scenario_frames())
+    m.contact_window(3e6)
+    return m.finalize().summary()
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_golden_summary(method, counters, request):
+    path = os.path.join(GOLDEN_DIR, f"{method}.json")
+    got = _run_summary(method, counters)
+    if request.config.getoption("--update-golden"):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+        pytest.skip(f"updated {path}")
+    if not os.path.exists(path):
+        pytest.fail(f"golden snapshot missing: {path} — run pytest with "
+                    f"--update-golden to create it")
+    with open(path) as f:
+        want = json.load(f)
+    assert set(got) == set(want), "summary keys drifted"
+    for k, w in want.items():
+        g = got[k]
+        if isinstance(w, int) and isinstance(g, int):
+            assert g == w, f"{method}.{k}: {g} != golden {w}"
+        else:
+            assert g == pytest.approx(w, rel=1e-12, abs=1e-12), (
+                f"{method}.{k}: {g} != golden {w}")

@@ -1,0 +1,138 @@
+"""Property-based Mission budget-conservation invariants (hypothesis).
+
+Runs under real hypothesis when installed (see requirements-dev.txt);
+otherwise the `_hypothesis_fallback` shim skips these cleanly. All
+generative tests are marked ``slow`` so `-m "not slow"` deselects them.
+
+Invariants (paper §III-A-1 budget model):
+  * onboard energy classes (capture/compute/aggregate) never overdraw
+    the granted harvest — the energy cap governs them;
+  * downlink bytes never exceed the offered window budgets, per window
+    and in aggregate;
+  * ``pending_segments`` drains to 0 after ``finalize()`` and stays
+    drained (idempotence);
+  * splitting a frame batch across multiple ``ingest()`` calls conserves
+    the aggregate tile/truth/frame counts of a single call, for every
+    registered policy.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; the rest of the suite runs
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.mission import Mission
+from repro.core.pipeline import PipelineConfig
+from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
+
+METHODS = ("space_only", "ground_only", "tiansuan", "kodan", "targetfuse")
+# small scenes: 4 tiles/frame at the default 128-px tile size
+SPEC = SceneSpec("prop", 256, (4, 10), (8, 20), cloud_fraction=0.2)
+
+pytestmark = pytest.mark.slow
+
+
+def _frames(seed: int, n_frames: int):
+    rng = np.random.default_rng(seed)
+    img, b, c = make_scene(rng, SPEC)
+    return revisit_frames(rng, img, b, c, n_frames)
+
+
+def _pcfg(method: str, **kw) -> PipelineConfig:
+    kw.setdefault("score_thresh", 0.25)
+    kw.setdefault("tiles_per_day", 20_000.0)
+    return PipelineConfig(method=method, **kw)
+
+
+@given(method=st.sampled_from(METHODS), seed=st.integers(0, 2**20),
+       n_frames=st.integers(1, 3),
+       tiles_per_day=st.floats(2_000.0, 200_000.0))
+@settings(max_examples=10, deadline=None)
+def test_energy_never_overdraws_grant(method, seed, n_frames, tiles_per_day,
+                                      counters):
+    """Capture + compute + aggregate spend stays within the granted
+    harvest (the onboard classes the energy cap governs)."""
+    space, ground = counters
+    m = Mission(space, ground, _pcfg(method, tiles_per_day=tiles_per_day))
+    m.ingest(_frames(seed, n_frames))
+    m.finalize()
+    led = m.ledger
+    assert led.e_cap + led.e_com + led.e_agg <= led.budget_j + 1e-9
+    assert led.e_com <= 0.95 * led.budget_j + 1e-9  # the 5% headroom cap
+    assert led.remaining >= 0.0
+
+
+@given(method=st.sampled_from(METHODS), seed=st.integers(0, 2**20),
+       budgets=st.lists(st.floats(0.0, 3.0), min_size=1, max_size=3))
+@settings(max_examples=10, deadline=None)
+def test_downlink_never_exceeds_window_budget(method, seed, budgets,
+                                              counters):
+    """Per-window and aggregate byte spends respect the offered budgets
+    (budgets drawn in units of one full-scale tile)."""
+    space, ground = counters
+    m = Mission(space, ground, _pcfg(method))
+    reports = []
+    for k, b in enumerate(budgets):
+        m.ingest(_frames(seed + k, 1))
+        reports.append(m.contact_window(b * m.tile_bytes))
+    for rep in reports:
+        assert rep.bytes_spent <= rep.budget_bytes + 1e-6
+    assert m.bytes_spent <= m.bytes_budget + 1e-6
+    r = m.result()
+    assert r.bytes_budget == pytest.approx(
+        sum(rep.budget_bytes for rep in reports))
+
+
+@given(method=st.sampled_from(METHODS), seed=st.integers(0, 2**20),
+       n_passes=st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_finalize_drains_pending_and_stays_drained(method, seed, n_passes,
+                                                   counters):
+    space, ground = counters
+    m = Mission(space, ground, _pcfg(method))
+    for k in range(n_passes):
+        m.ingest(_frames(seed + k, 1))
+    assert m.pending_segments == n_passes
+    r1 = m.finalize()
+    assert m.pending_segments == 0
+    s1 = r1.summary()
+    # idempotent: repeated finalize (and interleaved windows) are no-ops
+    m.contact_window(1e9)
+    r2 = m.finalize()
+    assert m.pending_segments == 0
+    assert r2.summary() == s1
+
+
+@given(method=st.sampled_from(METHODS), seed=st.integers(0, 2**20),
+       n_frames=st.integers(2, 4), split=st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_split_ingest_conserves_aggregate_counts(method, seed, n_frames,
+                                                 split, counters):
+    """ingest(A+B) and ingest(A); ingest(B) see the same tiles, truth,
+    frames, and (additively) the same day-fraction entitlements."""
+    space, ground = counters
+    split = min(split, n_frames - 1)
+    frames = _frames(seed, n_frames)
+
+    one = Mission(space, ground, _pcfg(method))
+    rep_one = one.ingest(frames)
+    r_one = one.finalize()
+
+    two = Mission(space, ground, _pcfg(method))
+    rep_a = two.ingest(frames[:split])
+    rep_b = two.ingest(frames[split:])
+    r_two = two.finalize()
+
+    assert rep_a.n_frames + rep_b.n_frames == rep_one.n_frames
+    assert rep_a.n_tiles + rep_b.n_tiles == rep_one.n_tiles
+    assert two.frames_seen == one.frames_seen
+    assert r_two.tiles_total == r_one.tiles_total
+    np.testing.assert_array_equal(r_two.per_tile_true, r_one.per_tile_true)
+    assert r_two.total_true == r_one.total_true
+    # day-fraction budgets prorate linearly over the split
+    assert (rep_a.energy_granted_j + rep_b.energy_granted_j
+            == pytest.approx(rep_one.energy_granted_j, rel=1e-9))
+    assert (rep_a.byte_entitlement + rep_b.byte_entitlement
+            == pytest.approx(rep_one.byte_entitlement, rel=1e-9))

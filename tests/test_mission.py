@@ -4,13 +4,10 @@ registry/stage extensibility.
 """
 import inspect
 
-import jax
 import numpy as np
 import pytest
 
-from repro.configs import get_config, reduced
 from repro.core._legacy import run_pipeline_legacy
-from repro.core.cascade import fit_counter
 from repro.core.mission import Mission, Stage, default_ingest_stages
 from repro.core.pipeline import (PipelineConfig, PipelineResult, budgets_for,
                                  run_pipeline)
@@ -23,15 +20,8 @@ SPEC = SceneSpec("mini", 384, (12, 18), (10, 24), cloud_fraction=0.2)
 METHODS = ("space_only", "ground_only", "tiansuan", "kodan", "targetfuse")
 
 
-@pytest.fixture(scope="module")
-def counters():
-    rng = np.random.default_rng(0)
-    scenes = [make_scene(rng, SPEC) for _ in range(4)]
-    sp_cfg = reduced(get_config("targetfuse-space"))
-    gd_cfg = reduced(get_config("targetfuse-ground"))
-    sp, _ = fit_counter(sp_cfg, scenes, 128, 150, jax.random.PRNGKey(0))
-    gd, _ = fit_counter(gd_cfg, scenes, 128, 300, jax.random.PRNGKey(1))
-    return (sp, sp_cfg), (gd, gd_cfg)
+# `counters` comes from tests/conftest.py (session-scoped: the same
+# trained pair serves the mission, fleet, invariant, and golden suites)
 
 
 @pytest.fixture(scope="module")
@@ -271,6 +261,39 @@ def test_finalize_flushes_pending_onboard_only(frames, counters):
     # dynamic_conf: leftovers are counted in space, so onboard results land
     assert r.tiles_processed_space > 0
     assert r.total_pred > 0
+
+
+def test_finalize_idempotent(frames, counters):
+    """finalize() twice (and contact_window() in between) is a no-op:
+    no double flush, no byte-budget inflation, no raise."""
+    space, ground = counters
+    m = Mission(space, ground,
+                PipelineConfig(method="targetfuse", score_thresh=0.25))
+    m.ingest(frames)
+    r1 = m.finalize()
+    s1 = r1.summary()
+    # an offered window after finalize neither drains nor accrues budget
+    w = m.contact_window(1e9)
+    assert w.segments == 0 and w.budget_bytes == 0.0
+    assert w.bytes_spent == 0.0 and w.tiles_downlinked == 0
+    r2 = m.finalize()
+    assert r2.summary() == s1
+    np.testing.assert_array_equal(r2.per_tile_pred, r1.per_tile_pred)
+    assert m.bytes_budget == r1.bytes_budget  # not inflated by the window
+
+
+def test_ingest_after_finalize_resumes_stream(frames, counters):
+    space, ground = counters
+    m = Mission(space, ground,
+                PipelineConfig(method="targetfuse", score_thresh=0.25))
+    m.ingest(frames)
+    r1 = m.finalize()
+    m.ingest(frames)
+    assert m.pending_segments == 1
+    w = m.contact_window()  # a real window again
+    assert w.segments == 1
+    r2 = m.finalize()
+    assert r2.tiles_total == 2 * r1.tiles_total
 
 
 def test_ingest_report_fields(frames, counters):
