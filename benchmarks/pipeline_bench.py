@@ -5,18 +5,23 @@ Two fig11-style (dataset-analogue, unlimited-downlink) workloads:
 
 * **method sweep** — one standard frame set per dataset x all five
   baseline methods: per-method frames/sec + tiles/sec and the parity
-  gate (per-tile predictions bit-identical-or-within-1e-5).
+  gate (per-tile predictions bit-identical-or-within-1e-5). Both arms
+  run INTERLEAVED in ONE subprocess, each cell warmed once and then
+  timed best-of-2 — steady-state throughput. (Cold-cache isolation is
+  pointless here, and sequential whole-arm subprocesses measured
+  minutes apart pick up >2x machine-speed drift on throttled CI boxes,
+  which used to swamp the per-cell signal.)
 * **pass sequence** — successive targetfuse runs over frame sets of
   VARYING size per dataset, like successive orbital passes. This is the
-  headline number: every pass presents new array shapes, so the seed
-  path recompiles its counting/ROI programs per pass while the engine's
-  fixed-shape programs (frame buckets, padded count batches) are
-  compiled once, ever.
+  headline number and is deliberately timed cold, single-shot, each arm
+  in a fresh subprocess so neither inherits the other's XLA compile
+  cache: every pass presents new array shapes, so the seed path
+  recompiles its counting/ROI programs per pass while the engine's
+  fixed-shape programs (frame buckets, size-tiered count batches) are
+  compiled once, ever — the per-distinct-shape recompiles are exactly
+  the cost the engine removes.
 
-Each arm runs in a fresh subprocess so neither inherits the other's XLA
-compile cache — the per-distinct-shape recompiles are exactly the cost
-the engine removes, so they must be measured cold in both arms. Writes
-``BENCH_pipeline.json``.
+Writes ``BENCH_pipeline.json``.
 """
 from __future__ import annotations
 
@@ -39,8 +44,9 @@ PASSES = {
 JSON_PATH = "BENCH_pipeline.json"
 
 
-def _child(use_engine: bool) -> None:
-    """Run both workloads in this process; dump timings+predictions JSON."""
+def _child(arm: str) -> None:
+    """``sweep``: both arms interleaved, steady-state. ``ref`` /
+    ``engine``: that arm's cold pass sequence. Dumps JSON to stdout."""
     import time
 
     import numpy as np
@@ -50,24 +56,40 @@ def _child(use_engine: bool) -> None:
     from repro.core.pipeline import PipelineConfig
 
     space, ground = counters()
-    out = {"sweep": {}, "passes": {}}
 
-    for name, spec in BENCH_DATASETS.items():
-        frames = frames_for(spec)
-        for m in METHODS:
-            pcfg = PipelineConfig(method=m, score_thresh=0.25,
-                                  use_engine=use_engine, **UNLIMITED)
-            t0 = time.perf_counter()
-            r = Mission(space, ground, pcfg).run(frames)
-            dt = time.perf_counter() - t0
-            out["sweep"][f"{name}_{m}"] = {
-                "s": dt,
-                "frames_per_s": len(frames) / dt,
-                "tiles_per_s": r.tiles_total / dt,
-                "cmae": r.cmae,
-                "pred": np.asarray(r.per_tile_pred).tolist(),
-            }
+    if arm == "sweep":
+        out = {"ref": {}, "engine": {}}
+        for name, spec in BENCH_DATASETS.items():
+            frames = frames_for(spec)
+            for m in METHODS:
+                cell = {}
+                for use_engine in (False, True):
+                    pcfg = PipelineConfig(method=m, score_thresh=0.25,
+                                          use_engine=use_engine, **UNLIMITED)
+                    Mission(space, ground, pcfg).run(frames)  # compile warm
+                    cell[use_engine] = [pcfg, None, None]  # dt, result
+                for _ in range(2):  # interleaved best-of-2 per arm
+                    for use_engine in (False, True):
+                        pcfg, dt, _ = cell[use_engine]
+                        t0 = time.perf_counter()
+                        r = Mission(space, ground, pcfg).run(frames)
+                        dt1 = time.perf_counter() - t0
+                        cell[use_engine] = [
+                            pcfg, dt1 if dt is None else min(dt, dt1), r]
+                for use_engine, key in ((False, "ref"), (True, "engine")):
+                    _, dt, r = cell[use_engine]
+                    out[key][f"{name}_{m}"] = {
+                        "s": dt,
+                        "frames_per_s": len(frames) / dt,
+                        "tiles_per_s": r.tiles_total / dt,
+                        "cmae": r.cmae,
+                        "pred": np.asarray(r.per_tile_pred).tolist(),
+                    }
+        json.dump(out, sys.stdout)
+        return
 
+    use_engine = arm == "engine"
+    out = {"passes": {}}
     for name, spec in BENCH_DATASETS.items():
         for i, (ns, rv) in enumerate(PASSES[name]):
             frames = frames_for(spec, n_scenes=ns, revisits=rv, seed=10 + i)
@@ -106,6 +128,7 @@ def run(json_path: str = JSON_PATH):
     from benchmarks.common import counters
     counters()  # train/cache once; the child processes just load
 
+    sweep = _spawn("sweep")
     ref = _spawn("ref")
     eng = _spawn("engine")
 
@@ -115,8 +138,8 @@ def run(json_path: str = JSON_PATH):
         return float(np.max(np.abs(np.asarray(r["pred"])
                                    - np.asarray(e["pred"])))) if r["pred"] else 0.0
 
-    for k, r in ref["sweep"].items():
-        e = eng["sweep"][k]
+    for k, r in sweep["ref"].items():
+        e = sweep["engine"][k]
         dev = dev_of(r, e)
         max_dev = max(max_dev, dev)
         report["sweep"][k] = {
@@ -161,7 +184,7 @@ def run(json_path: str = JSON_PATH):
 
 if __name__ == "__main__":
     if "--child" in sys.argv:
-        _child(sys.argv[sys.argv.index("--child") + 1] == "engine")
+        _child(sys.argv[sys.argv.index("--child") + 1])
     else:
         for name, us, derived in run():
             print(f"{name},{us:.1f},{derived}")

@@ -10,7 +10,11 @@ window at elevation-dependent bandwidth.
 ``--oracle`` runs the same scenario through the looped sequential
 per-Mission path (the parity oracle the fleet is exact-equal to);
 ``--check`` runs both and asserts exact equality of every satellite's
-per-tile predictions.
+per-tile predictions. ``--devices N`` shards the fleet along a ``sats``
+device mesh (on CPU, force host devices first:
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) — with
+``--check`` that asserts the sharded fleet against the sequential
+oracle.
 """
 import argparse
 import os
@@ -21,6 +25,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core.fleet import run_scenario
+from repro.core.fleet_sharding import sats_mesh
 from repro.core.pipeline import PipelineConfig
 from repro.data.scenarios import (FleetScenarioSpec, GroundStation,
                                   generate_scenario)
@@ -34,12 +39,16 @@ def main():
     ap.add_argument("--rounds", type=int, default=4,
                     help="orbital pass rounds (one contact per station each)")
     ap.add_argument("--bandwidth", type=float, default=50.0)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the fleet across this many devices "
+                         "(sats mesh axis)")
     ap.add_argument("--oracle", action="store_true",
                     help="run the looped per-Mission parity oracle instead")
     ap.add_argument("--check", action="store_true",
                     help="run BOTH paths and assert exact parity")
     args = ap.parse_args()
 
+    mesh = sats_mesh(args.devices)  # None for --devices 1
     space, ground = get_counters()
     spec = FleetScenarioSpec(
         n_sats=args.sats, n_rounds=args.rounds, frames_per_pass=2,
@@ -51,7 +60,8 @@ def main():
     pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25,
                           bandwidth_mbps=args.bandwidth)
 
-    path = "oracle (looped Missions)" if args.oracle else "fleet"
+    path = ("oracle (looped Missions)" if args.oracle else
+            f"fleet ({args.devices} device(s))")
     print(f"== {args.sats}-satellite constellation, {args.rounds} rounds, "
           f"{path} path ==")
     for rnd in scenario.rounds:
@@ -63,20 +73,18 @@ def main():
                   f"({c.budget_bytes / 1e6:.2f} MB window)")
 
     results, driver = run_scenario(space, ground, pcfg, scenario,
-                                   fleet=not args.oracle)
+                                   fleet=not args.oracle, mesh=mesh)
     if args.check:
         other, _ = run_scenario(space, ground, pcfg, scenario,
                                 fleet=args.oracle)
         for i, (a, b) in enumerate(zip(results, other)):
             np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred)
             assert a.summary() == b.summary(), f"sat{i} summary mismatch"
-        print("parity check: fleet == looped Missions (exact)")
+        what = (f"sharded fleet ({args.devices} devices)"
+                if mesh is not None else "fleet")
+        print(f"parity check: {what} == looped Missions (exact)")
 
-    agg_pred = agg_true = agg_bytes = agg_budget = 0.0
     for s, r in enumerate(results):
-        agg_pred += r.total_pred
-        agg_true += r.total_true
-        agg_budget += r.bytes_budget
         print(f"  sat{s}: CMAE={r.cmae:.3f} "
               f"proc={r.tiles_processed_space}/{r.tiles_total} "
               f"down={r.tiles_downlinked} "
@@ -87,18 +95,27 @@ def main():
     # compute spend never overdraws the granted harvest (capture is
     # charged unconditionally — imaging happens even through an eclipse
     # round's zero grant — so it sits outside the cap)
+    agg_budget = sum(r.bytes_budget for r in results)
     if args.oracle:
         missions = driver
+        agg_pred = sum(r.total_pred for r in results)
+        agg_true = sum(r.total_true for r in results)
         agg_bytes = sum(m.bytes_spent for m in missions)
         for m in missions:
             assert m.ledger.e_com <= m.ledger.budget_j + 1e-9, \
                 "onboard compute overdraw"
     else:
         fleet = driver
+        s = fleet.summary()  # the fleet-aggregate scalars, ready-made
+        agg_pred, agg_true, agg_bytes = (s["total_pred"], s["total_true"],
+                                         s["bytes_spent"])
         led = fleet.ledger
-        agg_bytes = float(led.bytes_spent.sum())
         assert (led.e_com <= led.budget_j + 1e-9).all(), \
             "onboard compute overdraw"
+        print(f"fleet runtime: {s['n_devices']} device(s), "
+              f"dedup_batched={s['dedup_batched']}, "
+              f"ingest {s['tiles_per_s']:.0f} tiles/s "
+              f"({s['tiles_per_s_per_sat']:.0f}/sat)")
     assert agg_bytes <= agg_budget + 1e-6, "byte overdraw"
     print(f"constellation aggregate count: pred={agg_pred:.0f} "
           f"true={agg_true:.0f} "

@@ -23,7 +23,17 @@ timeout 600 python examples/quickstart.py
 echo "== example smoke: constellation fleet path (2 sats, parity-checked) =="
 timeout 600 python examples/constellation_sim.py --sats 2 --rounds 2 --check
 
-echo "== fleet bench smoke (tiny config) =="
+echo "== sharded fleet gates (4 forced host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  timeout 900 python -m pytest -q tests/test_fleet.py -k "sharded"
+
+echo "== example smoke: sharded constellation (2 devices, parity-checked) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+  timeout 600 python examples/constellation_sim.py --sats 3 --rounds 2 \
+  --devices 2 --check
+
+echo "== fleet bench smoke (tiny config, incl. sharded-path parity gate) =="
 FLEET_BENCH_SATS=2 FLEET_BENCH_ROUNDS=1 FLEET_BENCH_ITERS=1 \
+  FLEET_BENCH_DEVICES=1,2 FLEET_BENCH_SHARD_SATS=3 \
   FLEET_BENCH_JSON=BENCH_fleet_smoke.json \
-  timeout 600 python -m benchmarks.run fleet --strict
+  timeout 900 python -m benchmarks.run fleet --strict

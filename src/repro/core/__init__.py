@@ -18,3 +18,4 @@ from repro.core.mission import (Mission, Stage, Segment, IngestReport,
                                 default_ingest_stages)
 from repro.core.energy import ByteLedger, FleetLedger
 from repro.core.fleet import Fleet, run_scenario
+from repro.core.fleet_sharding import FleetSharding, sats_mesh

@@ -16,30 +16,80 @@ import numpy as np
 
 from repro.configs.base import DetectorConfig
 from repro.core import tiling
+from repro.core.dedup import bucket_size
 from repro.models import detector
 from repro.optim.adamw import adamw
 from repro.optim.schedule import cosine_with_warmup
+
+
+def _count_tiles_body(params, cfg: DetectorConfig, tiles,
+                      score_thresh: float = 0.3, nms_iou: float = 0.25):
+    raw = detector.forward(params, cfg, tiles)
+    return detector.count_and_confidence(raw, cfg, score_thresh=score_thresh,
+                                         iou_thresh=nms_iou)
 
 
 @partial(jax.jit, static_argnames=("cfg", "score_thresh", "nms_iou"))
 def count_tiles(params, cfg: DetectorConfig, tiles, score_thresh: float = 0.3,
                 nms_iou: float = 0.25):
     """tiles (N, S, S, 3) already at cfg.input_size -> (counts, conf)."""
-    raw = detector.forward(params, cfg, tiles)
-    return detector.count_and_confidence(raw, cfg, score_thresh=score_thresh,
-                                         iou_thresh=nms_iou)
+    return _count_tiles_body(params, cfg, tiles, score_thresh, nms_iou)
 
 
-def _count_forward(params, cfg, t, batch: int, score_thresh, nms_iou):
+@partial(jax.jit, static_argnames=("cfg", "score_thresh", "nms_iou"))
+def _count_tiles_chunks(params, cfg: DetectorConfig, chunks,
+                        score_thresh: float, nms_iou: float):
+    """:func:`count_tiles` vmapped over a stacked (n_chunks, batch, ...)
+    axis; with the chunk axis placed along a ``sats`` device mesh, each
+    device counts its share of the fleet's batches in parallel. The
+    detector is per-sample, so per-chunk outputs are bit-equal to
+    looping the single-chunk program."""
+    return jax.vmap(lambda t: _count_tiles_body(params, cfg, t,
+                                                score_thresh, nms_iou))(chunks)
+
+
+def _tier_batch(n: int, batch: int, floor: int = 8) -> int:
+    """Size-tiered effective batch: the smallest power-of-two tier in
+    [floor, batch] covering ``n``. Small workloads (a handful of
+    representatives, a short downlink) stop paying the full-batch
+    padding — n=10 runs a 16-slot forward, not a 64-slot one — while the
+    compiled-program count stays bounded at log2(batch/floor)+1 per cfg
+    instead of growing with workload size like the seed path."""
+    return min(bucket_size(n, floor), batch)
+
+
+def _count_forward(params, cfg, t, batch: int, score_thresh, nms_iou,
+                   sharding=None):
     """Shared forward tail: zero-pad rows to whole ``batch`` chunks, run
     the one fixed-shape compiled program per chunk, and transfer
-    (counts, conf) to host in a single copy -> (2, n_rows_padded)."""
+    (counts, conf) to host in a single copy -> (2, n_rows_padded).
+
+    With an on-mesh :class:`~repro.core.fleet_sharding.FleetSharding`
+    and more than one chunk, the chunks are stacked, lane-padded to a
+    device multiple, and counted in ONE sharded
+    :func:`_count_tiles_chunks` call across the mesh.
+    """
+    from repro.core.fleet_sharding import ctx
+    sh = ctx(sharding)
     pad = -t.shape[0] % batch
     if pad:
         t = jnp.concatenate([t, jnp.zeros((pad, *t.shape[1:]), t.dtype)])
     t = t.reshape(-1, batch, *t.shape[1:])
+    n_chunks = t.shape[0]
+    if sh.on_mesh and n_chunks > 1:
+        # pad the chunk axis to a power-of-two bucket x device multiple
+        # (zero chunks are inert): the stacked forward compiles per
+        # chunk count, and workloads present many distinct counts
+        n_stack = sh.pad(bucket_size(n_chunks, 1))
+        if n_stack != n_chunks:
+            t = jnp.concatenate(
+                [t, jnp.zeros((n_stack - n_chunks, *t.shape[1:]), t.dtype)])
+        c, f = _count_tiles_chunks(params, cfg, sh.device_put(t),
+                                   score_thresh, nms_iou)
+        return np.asarray(jnp.stack([c[:n_chunks].reshape(-1),
+                                     f[:n_chunks].reshape(-1)]))
     outs_c, outs_f = [], []
-    for i in range(t.shape[0]):
+    for i in range(n_chunks):
         c, f = count_tiles(params, cfg, t[i], score_thresh, nms_iou)
         outs_c.append(c)
         outs_f.append(f)
@@ -50,15 +100,16 @@ def _count_forward(params, cfg, t, batch: int, score_thresh, nms_iou):
 def count_tiles_batched(params, cfg, tiles, batch: int = 64, score_thresh=0.3,
                         nms_iou: float = 0.25, idx=None):
     """Fixed-shape batching: EVERY batch — including the trailing one and
-    small inputs — is padded up to `batch`, so XLA compiles exactly one
-    program per (cfg, batch) and reuses it for any n. Per-batch results
-    stay on device; the host transfer happens once at the end.
+    small inputs — is padded up to a power-of-two size tier of `batch`
+    (see :func:`_tier_batch`), so XLA compiles a handful of programs per
+    cfg and reuses them for any n. Per-batch results stay on device; the
+    host transfer happens once at the end.
 
     ``idx``: optional tile indices to count (a device-side gather). The
     index vector is padded to a whole number of batches, so selecting
     any subset of a bucketed tile array reuses a handful of compiled
     gathers instead of compiling per subset size — and the forward only
-    ever runs at the one (batch, ...) shape.
+    ever runs at the tiered (batch, ...) shapes.
 
     (The detector is per-sample — convs + per-tile NMS — so padding
     never perturbs real tiles.)
@@ -66,6 +117,7 @@ def count_tiles_batched(params, cfg, tiles, batch: int = 64, score_thresh=0.3,
     n = int(len(idx)) if idx is not None else tiles.shape[0]
     if n == 0:
         return np.zeros((0,), np.float32), np.zeros((0,), np.float32)
+    batch = _tier_batch(n, batch)
     if idx is not None:
         n_pad = -(-n // batch) * batch
         idx_pad = np.zeros(n_pad, np.int64)
@@ -79,7 +131,7 @@ def count_tiles_batched(params, cfg, tiles, batch: int = 64, score_thresh=0.3,
 
 
 def count_tiles_multi(params, cfg, parts, batch: int = 64, score_thresh=0.3,
-                      nms_iou: float = 0.25):
+                      nms_iou: float = 0.25, sharding=None):
     """Count several independent gathers in SHARED fixed-shape batches.
 
     ``parts``: list of ``(tiles, idx)`` — e.g. one per satellite of a
@@ -93,7 +145,10 @@ def count_tiles_multi(params, cfg, parts, batch: int = 64, score_thresh=0.3,
     batch composition never perturbs a tile), but the trailing-batch
     padding is paid once for the whole fleet instead of once per
     satellite — 8 satellites with ~10 representatives each run one
-    64-slot forward instead of eight.
+    64-slot forward instead of eight. ``sharding``: optional
+    :class:`~repro.core.fleet_sharding.FleetSharding`; on-mesh, the
+    shared batches are placed along the ``sats`` mesh axis and counted
+    in one sharded forward call.
 
     Returns ``[(counts, conf), ...]`` aligned with ``parts``.
     """
@@ -117,7 +172,8 @@ def count_tiles_multi(params, cfg, parts, batch: int = 64, score_thresh=0.3,
         spans.append((off, k))
         off += k_pad
     t = gathered[0] if len(gathered) == 1 else jnp.concatenate(gathered)
-    out = _count_forward(params, cfg, t, batch, score_thresh, nms_iou)
+    out = _count_forward(params, cfg, t, _tier_batch(off, batch),
+                         score_thresh, nms_iou, sharding=sharding)
     return [(out[0, o:o + k], out[1, o:o + k]) if k else empty
             for o, k in spans]
 

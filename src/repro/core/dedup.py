@@ -18,6 +18,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kops
 
@@ -136,8 +137,7 @@ def dedup(tiles: jnp.ndarray, k: int, key, iters: int = 10) -> DedupResult:
     return dedup_from_moments(kops.tile_moments(tiles), k, key, iters)
 
 
-@partial(jax.jit, static_argnames=("k_pad", "iters"))
-def _dedup_padded_core(m_pad, n, k, key, *, k_pad: int, iters: int):
+def _dedup_core_body(m_pad, n, k, key, *, k_pad: int, iters: int):
     """Shape-stable featurize + k-means over padded raw moments.
 
     ``m_pad`` is (n_pad, D) with real rows [:n]; rows past ``n`` may
@@ -195,36 +195,18 @@ def _dedup_padded_core(m_pad, n, k, key, *, k_pad: int, iters: int):
     return x, cent
 
 
-def dedup_from_moments(moments: jnp.ndarray, k: int, key, iters: int = 10,
-                       n: int = None) -> DedupResult:
-    """Dedup pass over raw color moments: featurize -> cluster -> reps.
+_dedup_padded_core = partial(jax.jit, static_argnames=("k_pad", "iters"))(
+    _dedup_core_body)
 
-    The canonical clustering path — the engine AND the reference host
-    path both enter here, so identical real rows yield bit-identical
-    results. ``moments`` is (N, 3C); pass ``n`` when the trailing rows
-    are padding from an already-bucketed gather (their values are
-    ignored). Everything runs on power-of-two padded shapes: one
-    compiled program per size bucket serves every workload.
+
+def _dedup_finalize_body(x_pad, cent, nj):
+    """Final assignment + representative pick over the padded features.
+
+    ``nj`` stays an operand so one compiled program per (n_pad, k_pad)
+    bucket serves every workload size.
     """
-    n = int(moments.shape[0]) if n is None else int(n)
-    d = int(moments.shape[1])
-    # floored at 2x the base bucket so small passes share the compiled
-    # core with mid-size ones (the masked arithmetic is size-agnostic)
-    n_pad = dedup_pad_size(n)
-    # tie k's bucket to n's so one compiled core serves each size bucket
-    # (k <= n/2 in every pipeline call; bucket up for odd explicit k)
-    k_pad = (n_pad // 2 if int(k) <= n_pad // 2
-             else bucket_size(int(k), _K_BUCKET))
-    nj = jnp.int32(n)
-    if int(moments.shape[0]) == n_pad:
-        m_pad = jnp.asarray(moments)
-    else:
-        m_pad = jnp.zeros((n_pad, d), jnp.float32).at[:n].set(moments[:n])
-    x_pad, cent = _dedup_padded_core(m_pad, nj, jnp.int32(k), key,
-                                     k_pad=k_pad, iters=iters)
-
-    # final assignment + representatives, eager on bucketed shapes
-    # (nj stays an operand so these cached programs serve every n)
+    n_pad = x_pad.shape[0]
+    k_pad = cent.shape[0]
     assign, d2 = kops.kmeans_assign(x_pad, cent)
     mask = jnp.arange(n_pad) < nj
     big = jnp.float32(1e30)
@@ -239,8 +221,139 @@ def dedup_from_moments(moments: jnp.ndarray, k: int, key, iters: int = 10,
     # scatter-max: duplicate empty-cluster writes can't clobber a real rep
     rep_mask = jnp.zeros((n_pad,), bool).at[rep_clip].max(rep_found)
     sizes = jnp.zeros((k_pad,), jnp.int32).at[assign].add(mask.astype(jnp.int32))
+    return assign, rep_mask, sizes, rep_clip
+
+
+_dedup_finalize = jax.jit(_dedup_finalize_body)
+
+
+# --- vmapped multi-satellite core (one call per bucket, no per-sat loop) ---
+
+@partial(jax.jit, static_argnames=("k_pad", "iters"))
+def _dedup_multi_core(m_pad, n, k, key, *, k_pad: int, iters: int):
+    """:func:`_dedup_core_body` batched over a leading sat axis.
+
+    Inputs stack one satellite per leading row: ``m_pad`` (S, n_pad, D),
+    ``n``/``k`` (S,) int32, ``key`` (S, 2). The body is per-sample, so
+    lane *i* computes exactly the sequential core's arithmetic for
+    satellite *i* — batching (and sharding the sat axis across a device
+    mesh) changes which device runs a lane, not what it computes.
+    """
+    return jax.vmap(
+        lambda m, nn, kk, ke: _dedup_core_body(m, nn, kk, ke,
+                                               k_pad=k_pad, iters=iters)
+    )(m_pad, n, k, key)
+
+
+_dedup_finalize_multi = jax.jit(jax.vmap(_dedup_finalize_body))
+
+
+def _buckets_for(n: int, k: int):
+    """(n_pad, k_pad) shape bucket of one dedup workload.
+
+    n_pad is floored at 2x the base bucket so small passes share the
+    compiled core with mid-size ones; k's bucket is tied to n's so one
+    compiled core serves each size bucket (k <= n/2 in every pipeline
+    call; bucket up for odd explicit k).
+    """
+    n_pad = dedup_pad_size(n)
+    k_pad = (n_pad // 2 if int(k) <= n_pad // 2
+             else bucket_size(int(k), _K_BUCKET))
+    return n_pad, k_pad
+
+
+def _pad_rows(moments, n: int, n_pad: int):
+    d = int(moments.shape[1])
+    if int(moments.shape[0]) == n_pad:
+        return jnp.asarray(moments)
+    return jnp.zeros((n_pad, d), jnp.float32).at[:n].set(moments[:n])
+
+
+def dedup_from_moments(moments: jnp.ndarray, k: int, key, iters: int = 10,
+                       n: int = None) -> DedupResult:
+    """Dedup pass over raw color moments: featurize -> cluster -> reps.
+
+    The canonical clustering path — the engine AND the reference host
+    path both enter here, so identical real rows yield bit-identical
+    results. ``moments`` is (N, 3C); pass ``n`` when the trailing rows
+    are padding from an already-bucketed gather (their values are
+    ignored). Everything runs on power-of-two padded shapes: one
+    compiled program per size bucket serves every workload.
+    """
+    n = int(moments.shape[0]) if n is None else int(n)
+    n_pad, k_pad = _buckets_for(n, k)
+    nj = jnp.int32(n)
+    m_pad = _pad_rows(moments, n, n_pad)
+    x_pad, cent = _dedup_padded_core(m_pad, nj, jnp.int32(k), key,
+                                     k_pad=k_pad, iters=iters)
+    assign, rep_mask, sizes, rep_clip = _dedup_finalize(x_pad, cent, nj)
     return DedupResult(assign[:n], cent[:k], rep_mask[:n], sizes[:k],
                        rep_clip[:k])
+
+
+def dedup_multi(parts, iters: int = 10, sharding=None):
+    """Batched multi-satellite dedup: the whole constellation's
+    clustering in one vmapped core call per shape bucket.
+
+    ``parts``: list of ``(moments, k, key, n)`` — one entry per
+    satellite, where ``moments`` is that satellite's (possibly already
+    bucket-padded) raw color moments and ``n`` its real row count
+    (``None`` = all rows real). Satellites are grouped by their
+    (n_pad, k_pad) shape bucket; each group runs
+    :func:`_dedup_multi_core` + the vmapped finalize ONCE, eliminating
+    ingest's last per-satellite Python loop (~the k-means dispatch cost
+    per sat per round). With a :class:`~repro.core.fleet_sharding.
+    FleetSharding` mesh context, each group's sat axis is placed along
+    the ``sats`` mesh axis (lane-padded to a device multiple with inert
+    duplicate rows; pad lanes are dropped before results are read).
+
+    Per-satellite results are bit-equal on CPU to calling
+    :func:`dedup_from_moments` per satellite (enforced by
+    tests/test_fleet.py); backends whose batched reductions reassociate
+    should use the sequential path via ``Fleet(strict_parity=True)``.
+
+    Returns a list of :class:`DedupResult` aligned with ``parts``.
+    """
+    from repro.core.fleet_sharding import ctx
+    sh = ctx(sharding)
+    groups = {}
+    for slot, (moments, k, key, n) in enumerate(parts):
+        n = int(moments.shape[0]) if n is None else int(n)
+        bucket = _buckets_for(n, k)
+        groups.setdefault(bucket, []).append((slot, moments, k, key, n))
+    out = [None] * len(parts)
+    for (n_pad, k_pad), items in groups.items():
+        m = jnp.stack([_pad_rows(mo, n, n_pad) for _, mo, _, _, n in items])
+        ns = np.asarray([n for *_, n in items], np.int32)
+        ks = np.asarray([k for _, _, k, _, _ in items], np.int32)
+        keys = jnp.stack([key for _, _, _, key, _ in items])
+        g = len(items)
+        # lane-pad the sat axis to a power-of-two bucket (then to a
+        # device multiple on-mesh): group sizes vary round to round and
+        # fleet to fleet, and the stacked cores compile per lane count —
+        # bucketing bounds that at log2(fleet) programs per shape bucket
+        g_pad = sh.pad(bucket_size(g, 1))
+        if g_pad != g:
+            # inert pad lanes: repeat lane 0 (all-real shapes, so the
+            # padded program never sees degenerate n=0 inputs)
+            reps = np.zeros(g_pad - g, np.int64)
+            m = jnp.concatenate([m, m[jnp.asarray(reps)]])
+            ns = np.concatenate([ns, ns[reps]])
+            ks = np.concatenate([ks, ks[reps]])
+            keys = jnp.concatenate([keys, keys[jnp.asarray(reps)]])
+        m = sh.device_put(m)
+        ns_j = sh.device_put(jnp.asarray(ns))
+        ks_j = sh.device_put(jnp.asarray(ks))
+        keys = sh.device_put(keys)
+        x, cent = _dedup_multi_core(m, ns_j, ks_j, keys,
+                                    k_pad=k_pad, iters=iters)
+        assign, rep_mask, sizes, rep_clip = _dedup_finalize_multi(
+            x, cent, ns_j)
+        for i, (slot, _, k, _, n) in enumerate(items):
+            out[slot] = DedupResult(assign[i, :n], cent[i, :k],
+                                    rep_mask[i, :n], sizes[i, :k],
+                                    rep_clip[i, :k])
+    return out
 
 
 def expanded_counts(rep_counts: jnp.ndarray, res: DedupResult) -> jnp.ndarray:

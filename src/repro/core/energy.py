@@ -10,6 +10,7 @@ Real-world anchors from the paper / Baoyun satellite:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -164,7 +165,7 @@ class SatBytesView:
 class FleetLedger:
     """Stacked per-satellite budget state of a constellation.
 
-    One (n_sats,) float64 array per activity class instead of N scalar
+    One (n_lanes,) float64 array per activity class instead of N scalar
     :class:`EnergyLedger` objects — fleet-wide grants and charges are
     single vectorized ops, and per-lane IEEE arithmetic is identical to
     the scalar ledger (each lane sees the same sequence of float64
@@ -172,11 +173,22 @@ class FleetLedger:
     Byte ledgers (offered / requested / spent downlink bytes) ride in
     the same object. ``energy_view(i)`` / ``bytes_view(i)`` expose
     Mission-compatible scalar views of lane ``i``.
+
+    ``n_lanes`` (>= ``n_sats``, default equal) pads the stacked arrays
+    up to a device multiple so the lane axis aligns with a ``sats``
+    device mesh when ``n_sats`` doesn't divide evenly. Pad lanes start
+    at zero and no view ever points at them, so every grant/charge the
+    fleet issues writes zeros there — real lanes are never perturbed and
+    fleet-wide sums are unchanged.
     """
 
-    def __init__(self, n_sats: int):
+    def __init__(self, n_sats: int, n_lanes: Optional[int] = None):
         self.n_sats = int(n_sats)
-        z = lambda: np.zeros(self.n_sats, np.float64)  # noqa: E731
+        self.n_lanes = self.n_sats if n_lanes is None else int(n_lanes)
+        if self.n_lanes < self.n_sats:
+            raise ValueError(
+                f"n_lanes={self.n_lanes} < n_sats={self.n_sats}")
+        z = lambda: np.zeros(self.n_lanes, np.float64)  # noqa: E731
         self.budget_j = z()
         self.e_cap = z()
         self.e_com = z()
@@ -218,14 +230,19 @@ class FleetLedger:
     # -- per-satellite Mission-compatible views -----------------------------
 
     def energy_view(self, sat: int) -> SatEnergyView:
+        if not 0 <= sat < self.n_sats:
+            raise IndexError(f"sat {sat} out of range (pad lanes have no view)")
         return SatEnergyView(self, sat)
 
     def bytes_view(self, sat: int) -> SatBytesView:
+        if not 0 <= sat < self.n_sats:
+            raise IndexError(f"sat {sat} out of range (pad lanes have no view)")
         return SatBytesView(self, sat)
 
 
 def max_tiles_within_budget_vec(budget_j, gflops_per_tile: float,
-                                profile: DeviceProfile) -> np.ndarray:
+                                profile: DeviceProfile,
+                                sharding=None) -> np.ndarray:
     """Vectorized :func:`max_tiles_within_budget` over stacked budgets.
 
     Quotients are clamped below 2**62 before the integer cast — unlike
@@ -233,12 +250,38 @@ def max_tiles_within_budget_vec(budget_j, gflops_per_tile: float,
     an astronomical grant to a NEGATIVE cap and silently process zero
     tiles. The clamp exceeds any real tile count, so caps stay
     effectively unbounded (and fleet/oracle-identical) either way.
+
+    ``sharding``: optional on-mesh
+    :class:`~repro.core.fleet_sharding.FleetSharding` — the stacked
+    budget lanes are then placed along the ``sats`` mesh axis and the
+    quotient clamp computed on-device in float64 (IEEE division and the
+    truncating int64 cast are exactly specified, so on-mesh caps are
+    bit-equal to the host computation).
     """
     budget_j = np.asarray(budget_j, np.float64)
     if gflops_per_tile <= 0:
         return np.zeros(budget_j.shape, np.int64)
+    if sharding is not None and sharding.on_mesh and budget_j.ndim == 1:
+        return _lane_caps_on_mesh(budget_j, gflops_per_tile, profile,
+                                  sharding)
     q = budget_j / (gflops_per_tile * profile.joules_per_gflop)
     return np.minimum(q, np.float64(2 ** 62)).astype(np.int64)
+
+
+def _lane_caps_on_mesh(budget_j: np.ndarray, gflops_per_tile: float,
+                       profile: DeviceProfile, sharding) -> np.ndarray:
+    """Compute per-lane compute caps with the ledger lanes device-placed
+    along the ``sats`` mesh axis (f64 via a local x64 scope — jax's
+    default f32 downcast would break cap parity with the host op)."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    n = budget_j.shape[0]
+    with enable_x64():
+        lanes = sharding.shard(jnp.asarray(budget_j, jnp.float64))
+        q = lanes / (gflops_per_tile * profile.joules_per_gflop)
+        caps = jnp.minimum(q, jnp.float64(2 ** 62)).astype(jnp.int64)
+        return np.asarray(caps)[:n]
 
 
 def max_tiles_within_budget(budget_j: float, gflops_per_tile: float,

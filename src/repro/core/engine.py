@@ -43,53 +43,101 @@ class PreparedFrames:
     (rows past ``n`` are zero tiles), so every downstream gather and
     counting program compiles once per bucket instead of once per
     workload size. Host arrays (`roi_std`, `true`) hold the ``n`` real
-    tiles only.
+    tiles only. ``moments``/``roi_std`` are ``None`` when prepared with
+    ``with_stats=False`` (the policy uses neither ROI nor dedup, so the
+    fused program skips the statistics entirely).
     """
     tiles_sp: jnp.ndarray   # (N_pad, s_sp, s_sp, C) space-tier input, device
     tiles_gd: jnp.ndarray   # (N_pad, s_gd, s_gd, C) ground-tier input, device
-    moments: jnp.ndarray    # (N_pad, 3C) raw color moments, device
-    roi_std: np.ndarray     # (n,) mean per-channel stddev (host, for masking)
+    moments: object         # (N_pad, 3C) raw color moments, device (or None)
+    roi_std: object         # (n,) mean per-channel stddev, host (or None)
     true: np.ndarray        # (n,) ground-truth per-tile counts
     n: int                  # real tile count (rows [n:] are padding)
 
 
-@partial(jax.jit, static_argnames=("tile_size", "sp_size", "gd_size"))
-def _frame_program(imgs, tile_size: int, sp_size: int, gd_size: int):
-    """(B, H, W, C) frames -> (tiles_sp, tiles_gd, moments, roi_std).
+def _frame_program_body(imgs, tile_size: int, sp_size: int, gd_size: int,
+                        with_stats: bool = True):
+    """(B, H, W, C) frames -> (tiles_sp, tiles_gd[, moments, roi_std]).
 
     Fused tile -> resize(space) -> resize(ground) -> tile_moments in one
     compiled program; ``tiling.tile_image`` (vmapped over the frame
     batch) stays the single definition of tile order — row-major within
-    each frame, frames in batch order.
+    each frame, frames in batch order. ``with_stats=False`` (policies
+    that use neither the ROI filter nor dedup) compiles a variant
+    without the statistics tail — the tile values are identical, the
+    moments pass simply never runs.
     """
     b, _, _, c = imgs.shape
     t = jax.vmap(lambda im: tiling.tile_image(im, tile_size))(imgs)
     t = t.reshape(b * t.shape[1], tile_size, tile_size, c)
     tiles_sp = tiling.resize_tiles(t, sp_size)
     tiles_gd = tiling.resize_tiles(t, gd_size)
+    if not with_stats:
+        return tiles_sp, tiles_gd
     moments = kops.tile_moments(tiles_sp)
     roi_std = jnp.mean(moments[:, c:2 * c], axis=-1)
     return tiles_sp, tiles_gd, moments, roi_std
 
 
+_frame_program = partial(jax.jit, static_argnames=(
+    "tile_size", "sp_size", "gd_size", "with_stats"))(_frame_program_body)
+
+
+@partial(jax.jit, static_argnames=("tile_size", "sp_size", "gd_size",
+                                   "with_stats"))
+def _frame_program_multi(chunks, tile_size: int, sp_size: int, gd_size: int,
+                         with_stats: bool = True):
+    """The fused frame program vmapped over a stacked chunk axis.
+
+    ``chunks`` is (n_chunks, frame_bucket, H, W, C); with the chunk axis
+    placed along a ``sats`` device mesh, each device captures its share
+    of the fleet's frame buckets in parallel. The body is per-sample, so
+    per-chunk outputs are bit-equal to looping :func:`_frame_program`.
+    """
+    return jax.vmap(lambda imgs: _frame_program_body(
+        imgs, tile_size, sp_size, gd_size, with_stats))(chunks)
+
+
 def _bucketed_chunks(imgs, shape, tile_size: int, sp_size: int, gd_size: int,
-                     frame_bucket: int):
+                     frame_bucket: int, sharding=None,
+                     with_stats: bool = True):
     """Zero-pad a same-resolution image list to whole ``frame_bucket``s
     and run the fused program chunk by chunk (the single definition of
-    bucket rounding/fill, shared by every capture entry point)."""
+    bucket rounding/fill, shared by every capture entry point).
+
+    With an on-mesh :class:`~repro.core.fleet_sharding.FleetSharding`,
+    the chunks are stacked, lane-padded to a device multiple, and run as
+    ONE sharded :func:`_frame_program_multi` call — capture parallelizes
+    across the mesh instead of queueing per-chunk on one device.
+    """
+    from repro.core.fleet_sharding import ctx
+    sh = ctx(sharding)
     nb = -(-len(imgs) // frame_bucket) * frame_bucket
     arr = np.zeros((nb, *shape), np.float32)
     for j, img in enumerate(imgs):
         arr[j] = img
+    n_chunks = nb // frame_bucket
+    if sh.on_mesh and n_chunks > 1:
+        # pad the chunk axis to a power-of-two bucket x device multiple:
+        # chunk counts vary per round, and the stacked program compiles
+        # per chunk count — bucketing bounds the program count
+        n_stack = sh.pad(bucket_size(n_chunks, 1))
+        chunks_arr = np.zeros((n_stack, frame_bucket, *shape), np.float32)
+        chunks_arr[:n_chunks] = arr.reshape(n_chunks, frame_bucket, *shape)
+        stacked = sh.device_put(jnp.asarray(chunks_arr))
+        outs = _frame_program_multi(stacked, tile_size, sp_size, gd_size,
+                                    with_stats)
+        return [tuple(o[i] for o in outs) for i in range(n_chunks)]
     return [_frame_program(jnp.asarray(arr[c0:c0 + frame_bucket]),
-                           tile_size, sp_size, gd_size)
+                           tile_size, sp_size, gd_size, with_stats)
             for c0 in range(0, nb, frame_bucket)]
 
 
 def _per_frame_pieces(frames, tile_size: int, sp_size: int, gd_size: int,
-                      frame_bucket: int):
+                      frame_bucket: int, sharding=None,
+                      with_stats: bool = True):
     """Run the fused frame program grouped by resolution; return the
-    (tiles_sp, tiles_gd, moments, roi_std) piece of EVERY frame, in
+    (tiles_sp, tiles_gd[, moments, roi_std]) piece of EVERY frame, in
     input order. Each frame's piece is a pure function of that frame
     alone (the program is per-sample), so any regrouping of frames into
     buckets yields bit-identical pieces."""
@@ -99,7 +147,8 @@ def _per_frame_pieces(frames, tile_size: int, sp_size: int, gd_size: int,
     per_frame = [None] * len(frames)
     for shape, idxs in groups.items():
         chunks = _bucketed_chunks([frames[i][0] for i in idxs], shape,
-                                  tile_size, sp_size, gd_size, frame_bucket)
+                                  tile_size, sp_size, gd_size, frame_bucket,
+                                  sharding=sharding, with_stats=with_stats)
         ntile = chunks[0][0].shape[0] // frame_bucket
         for j, i in enumerate(idxs):
             ck, off = chunks[j // frame_bucket], (j % frame_bucket) * ntile
@@ -135,10 +184,11 @@ def _assemble(parts, frames, tile_size: int, roi_std: np.ndarray = None,
         return jnp.concatenate(
             [a, jnp.zeros((n_pad - a.shape[0], *a.shape[1:]), a.dtype)])
 
+    with_stats = len(parts[0]) == 4
     tiles_sp = pad(cat(0))
     tiles_gd = pad(cat(1))
-    moments = pad(cat(2))
-    if roi_std is None:
+    moments = pad(cat(2)) if with_stats else None
+    if roi_std is None and with_stats:
         roi_std = np.asarray(pad(cat(3)))[:n]
     true = np.concatenate([
         tile_counts(boxes, np.asarray(img).shape[0], tile_size)
@@ -147,18 +197,21 @@ def _assemble(parts, frames, tile_size: int, roi_std: np.ndarray = None,
     return PreparedFrames(tiles_sp, tiles_gd, moments, roi_std, true, n)
 
 
-def _empty_prepared(sp_size: int, gd_size: int) -> PreparedFrames:
+def _empty_prepared(sp_size: int, gd_size: int,
+                    with_stats: bool = True) -> PreparedFrames:
     n_pad = bucket_size(0)
     return PreparedFrames(
         tiles_sp=jnp.zeros((n_pad, sp_size, sp_size, 3), jnp.float32),
         tiles_gd=jnp.zeros((n_pad, gd_size, gd_size, 3), jnp.float32),
-        moments=jnp.zeros((n_pad, 9), jnp.float32),
-        roi_std=np.zeros(0), true=np.zeros(0, np.float64), n=0)
+        moments=jnp.zeros((n_pad, 9), jnp.float32) if with_stats else None,
+        roi_std=np.zeros(0) if with_stats else None,
+        true=np.zeros(0, np.float64), n=0)
 
 
 def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
                          gd_size: int,
-                         frame_bucket: int = FRAME_BUCKET):
+                         frame_bucket: int = FRAME_BUCKET, sharding=None,
+                         with_stats: bool = True):
     """Constellation-batched capture: N independent frame workloads (one
     per satellite) flow through SHARED frame buckets of the fused
     program, then split back into one :class:`PreparedFrames` per
@@ -169,11 +222,15 @@ def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
     per-sample, so bucket composition never perturbs a frame's tiles —
     but the padded-bucket cost is paid once across the fleet instead of
     once per satellite: 8 satellites with 2 frames each run 4 full
-    buckets instead of 8 half-empty ones.
+    buckets instead of 8 half-empty ones. ``sharding``: optional
+    :class:`~repro.core.fleet_sharding.FleetSharding`; on-mesh, the
+    shared frame buckets are placed along the ``sats`` mesh axis and
+    captured in one sharded program call per resolution.
     """
     flat = [f for w in workloads for f in w]
     if not flat:
-        return [_empty_prepared(sp_size, gd_size) for _ in workloads]
+        return [_empty_prepared(sp_size, gd_size, with_stats)
+                for _ in workloads]
 
     shapes = {np.asarray(img).shape for img, _, _ in flat}
     if len(shapes) == 1:
@@ -182,31 +239,35 @@ def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
         # chunk outputs — no per-frame device slicing
         (shape,) = shapes
         chunks = _bucketed_chunks([img for img, _, _ in flat], shape,
-                                  tile_size, sp_size, gd_size, frame_bucket)
+                                  tile_size, sp_size, gd_size, frame_bucket,
+                                  sharding=sharding, with_stats=with_stats)
         ntile = chunks[0][0].shape[0] // frame_bucket
         if len(chunks) == 1:
             cat = list(chunks[0])
         else:
             cat = [jnp.concatenate([ck[j] for ck in chunks])
                    for j in range(len(chunks[0]))]
-        roi_all = np.asarray(cat[3])  # ONE device->host copy for the fleet
+        # ONE device->host copy of the fleet's ROI stats
+        roi_all = np.asarray(cat[3]) if with_stats else None
         out, pos = [], 0
         for w in workloads:
             if not w:
-                out.append(_empty_prepared(sp_size, gd_size))
+                out.append(_empty_prepared(sp_size, gd_size, with_stats))
                 continue
             parts = [tuple(a[pos * ntile:(pos + len(w)) * ntile] for a in cat)]
-            roi = roi_all[pos * ntile:(pos + len(w)) * ntile]
+            roi = (roi_all[pos * ntile:(pos + len(w)) * ntile]
+                   if with_stats else None)
             pos += len(w)
             out.append(_assemble(parts, w, tile_size, roi_std=roi))
         return out
 
     per_frame = _per_frame_pieces(flat, tile_size, sp_size, gd_size,
-                                  frame_bucket)
+                                  frame_bucket, sharding=sharding,
+                                  with_stats=with_stats)
     out, pos = [], 0
     for w in workloads:
         if not w:
-            out.append(_empty_prepared(sp_size, gd_size))
+            out.append(_empty_prepared(sp_size, gd_size, with_stats))
             continue
         parts = per_frame[pos:pos + len(w)]
         pos += len(w)
@@ -215,16 +276,19 @@ def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
 
 
 def prepare_frames(frames, tile_size: int, sp_size: int, gd_size: int,
-                   frame_bucket: int = FRAME_BUCKET) -> PreparedFrames:
+                   frame_bucket: int = FRAME_BUCKET,
+                   with_stats: bool = True) -> PreparedFrames:
     """Run the fused frame program over a workload of (img, boxes, classes).
 
     Frames are grouped by resolution and processed in fixed-size buckets
     (zero-padded), so the number of compiled programs is bounded by the
     number of distinct frame shapes — not by workload size. Ground-truth
-    counts are collected host-side alongside.
+    counts are collected host-side alongside. ``with_stats=False`` skips
+    the moments/ROI statistics (policies that use neither); tiles are
+    bit-identical either way.
     """
     if not frames:
-        return _empty_prepared(sp_size, gd_size)
+        return _empty_prepared(sp_size, gd_size, with_stats)
 
     groups: dict = {}
     for i, (img, _, _) in enumerate(frames):
@@ -236,10 +300,11 @@ def prepare_frames(frames, tile_size: int, sp_size: int, gd_size: int,
         # _assemble's tile padding, so no per-frame reassembly is needed
         (shape, idxs), = groups.items()
         parts = _bucketed_chunks([frames[i][0] for i in idxs], shape,
-                                 tile_size, sp_size, gd_size, frame_bucket)
+                                 tile_size, sp_size, gd_size, frame_bucket,
+                                 with_stats=with_stats)
         ntile = parts[0][0].shape[0] // frame_bucket
         return _assemble(parts, frames, tile_size, n=ntile * len(idxs))
 
     parts = _per_frame_pieces(frames, tile_size, sp_size, gd_size,
-                              frame_bucket)
+                              frame_bucket, with_stats=with_stats)
     return _assemble(parts, frames, tile_size)

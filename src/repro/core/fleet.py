@@ -17,9 +17,15 @@ constellation through shared compiled programs:
   the counting program is paid once per fleet-round, not once per
   satellite.
 
-RoiFilter / Dedup / Select stay per-satellite (clustering and selection
-couple tiles only within one satellite) but reuse the bucketed compiled
-programs, which are shared across the fleet by construction.
+* **Dedup** — clustering couples tiles only within one satellite, but
+  the k-means cores all run in ONE vmapped call per shape bucket
+  (:func:`repro.core.dedup.dedup_multi`) — ingest has no per-satellite
+  Python loop left (``strict_parity=True`` restores the sequential
+  per-sat core).
+
+RoiFilter / Select stay per-satellite host bookkeeping (cheap masks over
+the fused statistics) and reuse the bucketed compiled programs, which
+are shared across the fleet by construction.
 
 Contact rounds batch too: Select + Downlink run strictly FIFO per
 window (the byte budget drains segment by segment), then the ground
@@ -39,17 +45,32 @@ Contact windows rotate: :meth:`Fleet.contact_round` serves the next
 ``stations`` satellites round-robin (or an explicit ``windows`` list
 from a :class:`~repro.data.scenarios.FleetScenario`), each draining its
 pending passes FIFO through its policy's selection.
+
+Scaling past one accelerator: ``Fleet(..., mesh=...)`` threads a
+:class:`~repro.core.fleet_sharding.FleetSharding` context through the
+batched stages — shared frame buckets, fleet counting batches, the
+vmapped dedup core, and the padded ledger lanes are then placed along a
+``sats`` device mesh axis (see :mod:`repro.core.fleet_sharding` for the
+parity story and the lane-padding rule for uneven fleets).
+``strict_parity=True`` trades the batched multi-satellite dedup core
+back for the sequential per-satellite one — construction-guaranteed
+bit-parity with looped Missions on any backend.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+import repro.core.dedup as dd
 from repro.core import engine
 from repro.core.cascade import count_tiles_multi
 from repro.core.energy import (FleetLedger, max_tiles_within_budget,
                                max_tiles_within_budget_vec)
+from repro.core.fleet_sharding import FleetSharding
 from repro.core.mission import (Aggregate, Capture, Dedup, Downlink,
                                 GroundRecount, IngestReport, Mission,
                                 OnboardCount, RoiFilter, Segment, Select,
@@ -72,10 +93,20 @@ class Fleet:
         satellite back to its Mission's sequential ingest.
     n_sats : fleet size when ``pcfg`` is a single config.
     energy_cfgs : as for :class:`Mission` (compute pricing), shared.
+    mesh : optional ``sats``-axis device mesh
+        (:func:`~repro.core.fleet_sharding.sats_mesh`); the batched
+        stages then place their stacked arrays along it. ``None`` =
+        single-device execution, byte-for-byte the pre-sharding path.
+    strict_parity : ``True`` runs dedup per-satellite through the
+        sequential core — bit-parity with looped Missions by
+        construction on every backend. ``False`` (default) runs the
+        vmapped multi-satellite dedup core (no per-sat Python loop);
+        bit-equal on CPU (test-enforced; documented tolerance 0.0), may
+        reassociate on other backends.
     """
 
     def __init__(self, space, ground, pcfg=None, n_sats: Optional[int] = None,
-                 energy_cfgs=None):
+                 energy_cfgs=None, mesh=None, strict_parity: bool = False):
         if isinstance(pcfg, (list, tuple)):
             pcfgs = list(pcfg)
             if n_sats is not None and n_sats != len(pcfgs):
@@ -92,12 +123,16 @@ class Fleet:
         self.n_sats = n_sats
         self.space = space
         self.ground = ground
+        self.sharding = FleetSharding(mesh)
+        self.strict_parity = bool(strict_parity)
         self.missions = [Mission(space, ground, p, energy_cfgs=energy_cfgs)
                          for p in pcfgs]
         # swap every Mission's scalar ledgers for lanes of ONE stacked
-        # fleet ledger: budget state lives in (n_sats,) arrays, and the
-        # ground-side Mission stages keep working unmodified via views
-        self.ledger = FleetLedger(n_sats)
+        # fleet ledger: budget state lives in (n_lanes,) arrays — lane-
+        # padded to the device mesh for uneven fleets — and the ground-
+        # side Mission stages keep working unmodified via views
+        self.ledger = FleetLedger(n_sats,
+                                  n_lanes=self.sharding.pad(n_sats))
         for i, m in enumerate(self.missions):
             m.ledger = self.ledger.energy_view(i)
             m.bytes_ledger = self.ledger.bytes_view(i)
@@ -105,6 +140,8 @@ class Fleet:
         self._batchable = [self._can_batch(m) for m in self.missions]
         self._contact_batchable = [self._can_batch_contact(m)
                                    for m in self.missions]
+        self._ingest_s = 0.0       # cumulative ingest wall time
+        self._tiles_ingested = 0   # for summary() throughput
 
     @staticmethod
     def _can_batch(m: Mission) -> bool:
@@ -131,6 +168,7 @@ class Fleet:
         per-satellite :class:`IngestReport`\\ s identical to calling
         ``Mission.ingest`` satellite by satellite.
         """
+        t0 = time.perf_counter()
         if len(frames_per_sat) != self.n_sats:
             raise ValueError(
                 f"expected {self.n_sats} frame lists, got {len(frames_per_sat)}")
@@ -153,6 +191,9 @@ class Fleet:
         if batched:
             self._ingest_batched(batched, frames_per_sat, energy_budgets_j,
                                  reports)
+        self._ingest_s += time.perf_counter() - t0
+        self._tiles_ingested += sum(r.n_tiles for r in reports
+                                    if r is not None)
         return reports  # type: ignore[return-value]
 
     def _ingest_batched(self, sats, frames_per_sat, energy_budgets_j,
@@ -166,8 +207,17 @@ class Fleet:
         for i in sats:
             by_tile.setdefault(self.missions[i].pcfg.tile_size, []).append(i)
         for tile_size, ids in by_tile.items():
+            # the shared buckets compute moments/ROI stats only if some
+            # satellite in the group consumes them (tiles are identical
+            # either way, so bucket sharing stays exact)
+            stats = any(
+                (self.missions[i].pcfg.use_roi
+                 and self.missions[i].policy.wants_roi)
+                or (self.missions[i].pcfg.use_dedup
+                    and self.missions[i].policy.wants_dedup) for i in ids)
             preps = engine.prepare_frames_multi(
-                [frames_per_sat[i] for i in ids], tile_size, sp_size, gd_size)
+                [frames_per_sat[i] for i in ids], tile_size, sp_size, gd_size,
+                sharding=self.sharding, with_stats=stats)
             for i, prep in zip(ids, preps):
                 seg = Segment(frames=list(frames_per_sat[i]),
                               energy_grant_override=energy_budgets_j[i])
@@ -178,8 +228,8 @@ class Fleet:
 
         # --- Capture.admit, with the ledger ops lifted out: the fleet
         # grants every satellite's entitlement in one vectorized op ---
-        evec = np.zeros(self.n_sats, np.float64)
-        fvec = np.zeros(self.n_sats, np.float64)
+        evec = np.zeros(self.ledger.n_lanes, np.float64)
+        fvec = np.zeros(self.ledger.n_lanes, np.float64)
         for i in sats:
             m, seg = self.missions[i], segs[i]
             evec[i] = Capture.entitle(m, seg)
@@ -188,11 +238,18 @@ class Fleet:
         self.ledger.grant(evec)
         self.ledger.charge_capture(fvec)
 
-        # --- RoiFilter + Dedup: per-satellite, shared compiled buckets ---
+        # --- RoiFilter: per-satellite host masks over the fused stats ---
         for i in sats:
             m, seg = self.missions[i], segs[i]
             m.ingest_stages[1].run(m, seg)  # RoiFilter
-            m.ingest_stages[2].run(m, seg)  # Dedup (charges aggregate)
+        # --- Dedup: one vmapped multi-sat core call per shape bucket
+        # (strict_parity falls back to the sequential per-sat core) ---
+        if self.strict_parity:
+            for i in sats:
+                m, seg = self.missions[i], segs[i]
+                m.ingest_stages[2].run(m, seg)  # Dedup (charges aggregate)
+        else:
+            self._dedup_batched(sats, segs)
 
         # --- OnboardCount: fleet-shared fixed-shape counting batches ---
         self._onboard_count_batched([i for i in sats
@@ -211,6 +268,40 @@ class Fleet:
                 energy_remaining_j=m.ledger.remaining,
                 byte_entitlement=seg.byte_entitlement)
 
+    def _dedup_batched(self, sats, segs):
+        """Mission.Dedup semantics with the per-satellite k-means loop
+        lifted into :func:`repro.core.dedup.dedup_multi`: every
+        satellite's padded moment gather joins ONE vmapped core call per
+        shape bucket (placed along the ``sats`` mesh axis when sharded).
+        Skip conditions, cluster counts, gathers, keys, and the
+        aggregation charge are exactly the sequential stage's."""
+        parts, ids = [], []
+        nops = np.zeros(self.ledger.n_lanes, np.float64)
+        for i in sats:
+            m, seg = self.missions[i], segs[i]
+            pcfg = m.pcfg
+            if (not (pcfg.use_dedup and m.policy.wants_dedup)
+                    or seg.active.sum() <= 4):
+                continue
+            k = pcfg.k_clusters or max(2, int(seg.active.sum()) // 2)
+            idx_active = np.where(seg.active)[0]
+            n_act = len(idx_active)
+            idx_pad = np.zeros(dd.dedup_pad_size(n_act), np.int64)
+            idx_pad[:n_act] = idx_active
+            parts.append((seg.prep.moments[jnp.asarray(idx_pad)], k,
+                          jax.random.PRNGKey(pcfg.seed), n_act))
+            ids.append((i, idx_active))
+            nops[i] = n_act
+        if not parts:
+            return
+        results = dd.dedup_multi(parts, sharding=self.sharding)
+        for (i, idx_active), res in zip(ids, results):
+            seg = segs[i]
+            assign = np.asarray(res.assign)
+            rep_local = np.asarray(res.rep_idx)
+            seg.rep_of[idx_active] = idx_active[rep_local[assign]]
+        self.ledger.charge_aggregate(nops)
+
     def _onboard_count_batched(self, sats, segs):
         """Mission.OnboardCount semantics, with every satellite's
         energy-capped representative set counted in shared batches."""
@@ -227,9 +318,10 @@ class Fleet:
         if uniform:
             (gflops, hw), = profiles
             caps = max_tiles_within_budget_vec(self.ledger.remaining * 0.95,
-                                               gflops, hw)
+                                               gflops, hw,
+                                               sharding=self.sharding)
         process: Dict[int, np.ndarray] = {}
-        nproc = np.zeros(self.n_sats, np.float64)
+        nproc = np.zeros(self.ledger.n_lanes, np.float64)
         for i in sats:
             m, seg = self.missions[i], segs[i]
             reps = np.unique(seg.rep_of[seg.active])
@@ -256,7 +348,8 @@ class Fleet:
         for thresh, ids in by_thresh.items():
             parts = [(segs[i].tiles_sp, process[i]) for i in ids]
             results = count_tiles_multi(params, cfg, parts,
-                                        score_thresh=thresh)
+                                        score_thresh=thresh,
+                                        sharding=self.sharding)
             for i, (c, f) in zip(ids, results):
                 seg = segs[i]
                 counts_sp = np.zeros(seg.n)
@@ -321,7 +414,8 @@ class Fleet:
             parts = [(seg.tiles_gd, seg.selection.downlink)
                      for _, seg in items]
             results = count_tiles_multi(params, cfg, parts,
-                                        score_thresh=thresh)
+                                        score_thresh=thresh,
+                                        sharding=self.sharding)
             for (m, seg), (c, _) in zip(items, results):
                 counts_gd = np.zeros(seg.n)
                 down = seg.selection.downlink
@@ -354,27 +448,42 @@ class Fleet:
         return [m.pending_segments for m in self.missions]
 
     def summary(self) -> dict:
-        """Fleet-aggregate scalars (per-satellite results summed)."""
+        """Fleet-aggregate scalars (per-satellite results summed) plus
+        the runtime facts benches and examples used to recompute ad hoc:
+        the device-mesh width, whether ingest ran the batched
+        (vmapped/no-per-sat-loop) dedup core, and ingest throughput
+        (cumulative wall time of :meth:`ingest` calls)."""
         rs = self.results()
+        tps = (self._tiles_ingested / self._ingest_s
+               if self._ingest_s > 0 else 0.0)
         return {
             "n_sats": self.n_sats,
+            "n_devices": self.sharding.n_devices,
+            "dedup_batched": not self.strict_parity,
+            "ingest_s": self._ingest_s,
+            "tiles_per_s": tps,
+            "tiles_per_s_per_sat": tps / self.n_sats,
             "total_true": sum(r.total_true for r in rs),
             "total_pred": sum(r.total_pred for r in rs),
             "tiles_total": sum(r.tiles_total for r in rs),
             "tiles_processed_space": sum(r.tiles_processed_space for r in rs),
             "tiles_downlinked": sum(r.tiles_downlinked for r in rs),
-            "bytes_spent": float(self.ledger.bytes_spent.sum()),
-            "bytes_budget": float(self.ledger.bytes_budget.sum()),
-            "energy_spent_j": float(self.ledger.spent.sum()),
-            "energy_budget_j": float(self.ledger.budget_j.sum()),
+            # sum REAL lanes only: pad lanes hold zeros, but including
+            # them changes numpy's pairwise-summation tree and shifts
+            # the aggregate by an ulp vs the unpadded fleet
+            "bytes_spent": float(self.ledger.bytes_spent[:self.n_sats].sum()),
+            "bytes_budget": float(self.ledger.bytes_budget[:self.n_sats].sum()),
+            "energy_spent_j": float(self.ledger.spent[:self.n_sats].sum()),
+            "energy_budget_j": float(self.ledger.budget_j[:self.n_sats].sum()),
         }
 
 
 def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
-                 energy_cfgs=None):
+                 energy_cfgs=None, mesh=None, strict_parity: bool = False):
     """Execute a :class:`~repro.data.scenarios.FleetScenario`.
 
-    ``fleet=True`` runs the constellation-batched :class:`Fleet` path;
+    ``fleet=True`` runs the constellation-batched :class:`Fleet` path
+    (optionally sharded along a ``sats`` device ``mesh``);
     ``fleet=False`` runs the looped-Mission parity oracle — one
     sequential ``Mission`` per satellite fed the identical event order.
     Returns ``(per_sat_results, driver)`` where ``driver`` is the Fleet
@@ -382,7 +491,8 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
     """
     n = scenario.spec.n_sats
     if fleet:
-        fl = Fleet(space, ground, pcfg, n_sats=n, energy_cfgs=energy_cfgs)
+        fl = Fleet(space, ground, pcfg, n_sats=n, energy_cfgs=energy_cfgs,
+                   mesh=mesh, strict_parity=strict_parity)
         for rnd in scenario.rounds:
             fl.ingest(rnd.frames_per_sat(n), rnd.harvest_per_sat(n))
             if rnd.contacts:

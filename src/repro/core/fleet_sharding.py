@@ -1,0 +1,137 @@
+"""Device-mesh fleet runtime: shard constellation work along a ``sats`` axis.
+
+The fleet engine batches every satellite's work into stacked device
+arrays (shared fused-capture frame buckets, fleet-wide counting batches,
+the vmapped multi-satellite dedup core, (n_lanes,) budget-ledger lanes).
+All of those arrays are *independent per lane/chunk*, so placing their
+leading axis along a one-axis device mesh turns the fleet round into an
+SPMD program: each device runs the identical per-sample arithmetic on
+its shard of the constellation, and XLA inserts no cross-device
+collectives because nothing couples lanes.
+
+:class:`FleetSharding` is the placement context threaded through
+``fleet.py`` / ``engine.py`` / ``cascade.py`` / ``energy.py``. It
+follows the off-mesh no-op pattern of :mod:`repro.sharding.ctx`: built
+without a mesh, every helper degrades to identity, so the single-device
+fleet path (and every existing test) runs through the exact same code
+unchanged.
+
+Parity story: on the CPU backend the sharded fleet is *bit-equal* to
+the single-device fleet (enforced by ``tests/test_fleet.py`` under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` and by the
+``benchmarks/fleet_bench.py`` multi-device sweep) — every batched
+program is per-sample and sharding only changes which device computes a
+lane. Backends whose batched clustering reductions may reassociate can
+force the sequential per-satellite dedup core with
+``Fleet(strict_parity=True)``.
+
+Uneven fleets (``n_sats % n_devices != 0``) are handled by *lane
+padding*: leading axes are zero-padded up to a device multiple before
+placement (:meth:`FleetSharding.pad` / :meth:`FleetSharding.shard`),
+and pad lanes are sliced off before any result is read — they never
+perturb real lanes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+SATS_AXIS = "sats"
+
+
+def sats_mesh(n_devices: Optional[int] = None) -> Optional[Mesh]:
+    """One-axis ``sats`` mesh over the first ``n_devices`` devices.
+
+    ``None`` uses every visible device. Returns ``None`` (= off-mesh,
+    single-device fleet path) when only one device would participate —
+    callers never special-case device counts. On CPU, multiple host
+    devices come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (set before the first jax import).
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n > len(devs):
+        raise ValueError(
+            f"sats_mesh: {n} devices requested but only {len(devs)} visible "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before jax initializes for forced host devices)")
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), (SATS_AXIS,))
+
+
+class FleetSharding:
+    """Placement context for the ``sats`` axis (no-op when ``mesh`` is None).
+
+    The two primitives every sharded call site composes:
+
+    * :meth:`pad` — round a lane/chunk count up to a device multiple.
+    * :meth:`shard` — zero-pad the leading axis to that multiple and
+      ``device_put`` with ``NamedSharding(P("sats", None, ...))``.
+
+    Off-mesh both are identity (``pad(n) == n``; ``shard`` returns its
+    input as-is), which is what keeps the single-device fleet byte-for-
+    byte on its pre-sharding code path.
+    """
+
+    __slots__ = ("mesh",)
+
+    def __init__(self, mesh: Optional[Mesh] = None):
+        self.mesh = mesh
+
+    @property
+    def on_mesh(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def n_devices(self) -> int:
+        return 1 if self.mesh is None else int(self.mesh.size)
+
+    def pad(self, n: int) -> int:
+        """Smallest device multiple >= n (lane padding; identity off-mesh)."""
+        nd = self.n_devices
+        return -(-int(n) // nd) * nd
+
+    def spec(self, ndim: int) -> P:
+        return P(*((SATS_AXIS,) + (None,) * (ndim - 1)))
+
+    def device_put(self, arr):
+        """Place ``arr`` with its (device-multiple) leading axis split
+        along ``sats``; identity off-mesh."""
+        if self.mesh is None:
+            return arr
+        return jax.device_put(arr, NamedSharding(self.mesh,
+                                                 self.spec(arr.ndim)))
+
+    def shard(self, arr):
+        """Zero-pad the leading axis to a device multiple and place it.
+
+        Pad rows hold zeros — every sharded fleet program is per-sample,
+        so they produce garbage *in their own rows only*; callers slice
+        results back to the real count. Off-mesh: identity.
+        """
+        if self.mesh is None:
+            return arr
+        n = arr.shape[0]
+        n_pad = self.pad(n)
+        if n_pad != n:
+            arr = jnp.concatenate(
+                [jnp.asarray(arr),
+                 jnp.zeros((n_pad - n, *arr.shape[1:]),
+                           jnp.asarray(arr).dtype)])
+        return self.device_put(jnp.asarray(arr))
+
+
+# the shared off-mesh singleton: call sites take `sharding=None` and
+# normalize through this so `None` and "no mesh" behave identically
+OFF_MESH = FleetSharding(None)
+
+
+def ctx(sharding: Optional[FleetSharding]) -> FleetSharding:
+    """Normalize an optional sharding argument (None -> off-mesh no-op)."""
+    return OFF_MESH if sharding is None else sharding

@@ -150,8 +150,13 @@ class Capture(Stage):
             seg.tiles_gd = np.zeros(
                 (0, gd_cfg.input_size, gd_cfg.input_size, 3), np.float32)
         elif pcfg.use_engine:
+            # skip the fused program's moments/ROI tail when this
+            # policy consumes neither statistic (tiles are identical)
+            with_stats = ((pcfg.use_roi and mission.policy.wants_roi)
+                          or (pcfg.use_dedup and mission.policy.wants_dedup))
             prep = engine.prepare_frames(seg.frames, pcfg.tile_size,
-                                         sp_cfg.input_size, gd_cfg.input_size)
+                                         sp_cfg.input_size, gd_cfg.input_size,
+                                         with_stats=with_stats)
             seg.prep = prep
             seg.tiles_sp, seg.tiles_gd = prep.tiles_sp, prep.tiles_gd
             seg.true, seg.n = prep.true, prep.n

@@ -1,12 +1,24 @@
 """Fleet engine tests: differential exact-parity against looped
-sequential Missions, stacked-ledger consistency, rotation semantics, and
-the batched capture/counting helpers."""
+sequential Missions, stacked-ledger consistency, rotation semantics,
+the batched capture/counting helpers, the vmapped multi-satellite dedup
+core, and the sharded (device-mesh) fleet runtime.
+
+The sharded differential gates need multiple host devices — run them via
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python -m pytest tests/test_fleet.py -k sharded
+
+(scripts/ci.sh does); under plain tier-1 they skip.
+"""
+import jax
 import numpy as np
 import pytest
 
+import repro.core.dedup as dd
 from repro.core.cascade import (count_tiles_batched, count_tiles_multi)
 from repro.core.engine import prepare_frames, prepare_frames_multi
 from repro.core.fleet import Fleet, run_scenario
+from repro.core.fleet_sharding import FleetSharding, sats_mesh
 from repro.core.mission import Mission
 from repro.core.pipeline import PipelineConfig
 from repro.data.scenarios import (FleetScenarioSpec, GroundStation,
@@ -246,6 +258,76 @@ def test_prepare_frames_multi_mixed_resolutions(counters):
         np.testing.assert_array_equal(got.true, want.true)
 
 
+def test_dedup_multi_matches_sequential_core():
+    """The vmapped multi-satellite dedup core is bit-equal (documented
+    tolerance: 0.0 on CPU) to per-satellite `dedup_from_moments` across
+    mixed shape buckets, paddings, and keys."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(9)
+    shapes = ((128, 100, 10), (128, 128, 20), (256, 200, 4), (128, 37, 5),
+              (128, 100, 10))  # a duplicate workload shares its bucket
+    parts = [(jnp.asarray(rng.random((n_pad, 9)).astype(np.float32)), k,
+              jax.random.PRNGKey(k), n)
+             for n_pad, n, k in shapes]
+    got = dd.dedup_multi(parts)
+    for (mo, k, key, n), res in zip(parts, got):
+        want = dd.dedup_from_moments(mo, k, key, n=n)
+        for f in res._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res, f)), np.asarray(getattr(want, f)),
+                err_msg=f"dedup_multi.{f} diverges at n={n} k={k}")
+
+
+def test_fleet_strict_parity_matches_batched_dedup(scenario, counters):
+    """strict_parity=True (sequential per-sat dedup core) and the
+    default batched dedup produce identical fleets on CPU — the
+    documented zero-tolerance parity story."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    got, fl = run_scenario(space, ground, pcfg, scenario, fleet=True)
+    want, fs = run_scenario(space, ground, pcfg, scenario, fleet=True,
+                            strict_parity=True)
+    assert fl.summary()["dedup_batched"] is True
+    assert fs.summary()["dedup_batched"] is False
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"strict-parity sat{i}")
+
+
+def test_fleet_summary_reports_runtime_facts(scenario, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    results, fleet = run_scenario(space, ground, pcfg, scenario, fleet=True)
+    s = fleet.summary()
+    assert s["n_devices"] == 1  # no mesh attached
+    assert s["dedup_batched"] is True
+    assert s["ingest_s"] > 0.0
+    assert s["tiles_per_s"] == pytest.approx(
+        sum(r.tiles_total for r in results) / s["ingest_s"])
+    assert s["tiles_per_s_per_sat"] == pytest.approx(
+        s["tiles_per_s"] / scenario.spec.n_sats)
+
+
+def test_count_tiles_batched_size_tiers_match_direct(counters):
+    """Tiered small-n batching is per-sample: every tier boundary yields
+    the same counts as the one-shot full-batch forward."""
+    from repro.core.cascade import _tier_batch, count_tiles
+    (params, cfg), _ = counters
+    assert [_tier_batch(n, 64) for n in (1, 8, 9, 16, 17, 63, 64, 65)] == \
+        [8, 8, 16, 16, 32, 64, 64, 64]
+    rng = np.random.default_rng(11)
+    tiles = rng.random((70, cfg.input_size, cfg.input_size, 3)
+                       ).astype(np.float32)
+    for n in (1, 5, 8, 9, 16, 17, 33, 63, 64, 65, 70):
+        import jax.numpy as jnp
+        want_c, want_f = count_tiles(params, cfg, jnp.asarray(tiles[:n]),
+                                     0.25)
+        got_c, got_f = count_tiles_batched(params, cfg, tiles,
+                                           idx=np.arange(n),
+                                           score_thresh=0.25)
+        np.testing.assert_array_equal(got_c, np.asarray(want_c))
+        np.testing.assert_array_equal(got_f, np.asarray(want_f))
+
+
 def test_count_tiles_multi_matches_batched(counters):
     (params, cfg), _ = counters
     rng = np.random.default_rng(7)
@@ -263,3 +345,141 @@ def test_count_tiles_multi_matches_batched(counters):
                                              score_thresh=0.25)
         np.testing.assert_array_equal(c, want_c)
         np.testing.assert_array_equal(f, want_f)
+
+
+# ---------------------------------------------------------------------------
+# sharded fleet runtime: device-mesh differential gates
+# (need >= 4 host devices: XLA_FLAGS=--xla_force_host_platform_device_count=4)
+# ---------------------------------------------------------------------------
+
+requires_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="sharded gates need XLA_FLAGS="
+           "--xla_force_host_platform_device_count=4 (scripts/ci.sh sets it)")
+
+
+def _assert_lanes_equal(a: Fleet, b: Fleet, ctx=""):
+    for f in ("budget_j", "e_cap", "e_com", "e_agg", "e_down",
+              "bytes_budget", "bytes_requested", "bytes_spent"):
+        np.testing.assert_array_equal(
+            getattr(a.ledger, f)[:a.n_sats], getattr(b.ledger, f)[:b.n_sats],
+            err_msg=f"{ctx}: ledger lane {f} differs")
+
+
+def test_off_mesh_sharding_is_noop():
+    """FleetSharding without a mesh degrades to identity (the ctx.py
+    pattern): single-device fleets run the pre-sharding code path."""
+    sh = FleetSharding(None)
+    assert not sh.on_mesh and sh.n_devices == 1
+    assert sh.pad(5) == 5
+    arr = np.arange(6.0)
+    assert sh.shard(arr) is arr and sh.device_put(arr) is arr
+    assert sats_mesh(1) is None
+
+
+@requires_mesh
+@pytest.mark.parametrize("method", METHODS)
+def test_fleet_sharded_parity_all_policies(method, scenario, counters):
+    """The acceptance gate: the mesh-sharded fleet (4 host devices) is
+    bit-equal to the single-device fleet — per-tile preds, summaries,
+    and ledger lanes — for every registered policy."""
+    space, ground = counters
+    mesh = sats_mesh(4)
+    pcfg = PipelineConfig(method=method, score_thresh=0.25)
+    got, fs = run_scenario(space, ground, pcfg, scenario, fleet=True,
+                           mesh=mesh)
+    want, f1 = run_scenario(space, ground, pcfg, scenario, fleet=True)
+    assert fs.summary()["n_devices"] == 4
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"sharded {method} sat{i}")
+    _assert_lanes_equal(fs, f1, f"sharded {method}")
+
+
+@requires_mesh
+def test_fleet_sharded_uneven_lane_padding(counters):
+    """n_sats=6 over 4 devices: lane padding to 8 never perturbs real
+    lanes — preds, summaries, and all ledger lanes match the unsharded
+    fleet, and pad lanes stay zero."""
+    space, ground = counters
+    mesh = sats_mesh(4)
+    sc = generate_scenario(FleetScenarioSpec(
+        n_sats=6, n_rounds=2, frames_per_pass=1,
+        stations=(GroundStation("gs0"),
+                  GroundStation("gs1", bandwidth_mbps=30.0)),
+        scene_mix=(SCENE_A, SCENE_B), eclipse_fraction=0.35, seed=13))
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    got, fs = run_scenario(space, ground, pcfg, sc, fleet=True, mesh=mesh)
+    want, f1 = run_scenario(space, ground, pcfg, sc, fleet=True)
+    assert fs.ledger.n_lanes == 8 and f1.ledger.n_lanes == 6
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"uneven sat{i}")
+    _assert_lanes_equal(fs, f1, "uneven")
+    for f in ("budget_j", "e_cap", "e_com", "e_agg", "e_down",
+              "bytes_budget", "bytes_requested", "bytes_spent"):
+        assert (getattr(fs.ledger, f)[6:] == 0.0).all(), \
+            f"pad lanes of {f} were written"
+    ss, s1 = fs.summary(), f1.summary()
+    assert ss["n_devices"] == 4 and s1["n_devices"] == 1
+    for s in (ss, s1):  # wall-clock/throughput legitimately differ
+        for key in ("n_devices", "ingest_s", "tiles_per_s",
+                    "tiles_per_s_per_sat"):
+            s.pop(key)
+    assert ss == s1
+
+
+@requires_mesh
+def test_fleet_sharded_matches_oracle_missions(scenario, counters):
+    """Transitively: sharded fleet == looped sequential Missions."""
+    space, ground = counters
+    mesh = sats_mesh(4)
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    got, _ = run_scenario(space, ground, pcfg, scenario, fleet=True,
+                          mesh=mesh)
+    want, _ = run_scenario(space, ground, pcfg, scenario, fleet=False)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"sharded-vs-oracle sat{i}")
+
+
+@requires_mesh
+def test_sharded_helpers_match_unsharded(counters):
+    """prepare_frames_multi / count_tiles_multi / dedup_multi with a
+    mesh context are bit-equal to their unsharded outputs."""
+    import jax.numpy as jnp
+    space, ground = counters
+    sh = FleetSharding(sats_mesh(4))
+    sp_size = space[1].input_size
+    gd_size = ground[1].input_size
+    rng = np.random.default_rng(17)
+    workloads = []
+    for k in (2, 1, 3, 2, 1):
+        img, b, c = make_scene(rng, SCENE_A)
+        workloads.append(revisit_frames(rng, img, b, c, k))
+    multi = prepare_frames_multi(workloads, 128, sp_size, gd_size,
+                                 sharding=sh)
+    plain = prepare_frames_multi(workloads, 128, sp_size, gd_size)
+    for got, want in zip(multi, plain):
+        assert got.n == want.n
+        np.testing.assert_array_equal(np.asarray(got.tiles_sp)[:got.n],
+                                      np.asarray(want.tiles_sp)[:want.n])
+        np.testing.assert_array_equal(np.asarray(got.moments)[:got.n],
+                                      np.asarray(want.moments)[:want.n])
+        np.testing.assert_array_equal(got.roi_std, want.roi_std)
+
+    (params, cfg), _ = counters
+    tiles = rng.random((96, cfg.input_size, cfg.input_size, 3)
+                       ).astype(np.float32)
+    parts = [(tiles, np.arange(0, 96, 3)), (tiles, np.array([5, 2, 77]))]
+    for (c1, f1), (c2, f2) in zip(
+            count_tiles_multi(params, cfg, parts, score_thresh=0.25,
+                              sharding=sh),
+            count_tiles_multi(params, cfg, parts, score_thresh=0.25)):
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+    dparts = [(jnp.asarray(rng.random((128, 9)).astype(np.float32)), 8,
+               jax.random.PRNGKey(s), 100 + s) for s in range(5)]
+    for got, want in zip(dd.dedup_multi(dparts, sharding=sh),
+                         dd.dedup_multi(dparts)):
+        for f in got._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                          np.asarray(getattr(want, f)))
