@@ -7,6 +7,12 @@ window at elevation-dependent bandwidth.
 
   PYTHONPATH=src python examples/constellation_sim.py --sats 4 --rounds 4
 
+Contact rounds execute as declarative ContactPlans: each scenario
+round's contact events become one lane-stacked plan
+(``Round.contact_plan``) that the batched ground-segment core drains —
+no per-window host loop. ``--async-ground`` additionally overlaps each
+round's batched ground recount with the next round's ingest dispatch.
+
 ``--oracle`` runs the same scenario through the looped sequential
 per-Mission path (the parity oracle the fleet is exact-equal to);
 ``--check`` runs both and asserts exact equality of every satellite's
@@ -46,6 +52,9 @@ def main():
                     help="run the looped per-Mission parity oracle instead")
     ap.add_argument("--check", action="store_true",
                     help="run BOTH paths and assert exact parity")
+    ap.add_argument("--async-ground", action="store_true",
+                    help="overlap each round's batched ground recount "
+                         "with the next round's ingest (exact either way)")
     args = ap.parse_args()
 
     mesh = sats_mesh(args.devices)  # None for --devices 1
@@ -73,7 +82,8 @@ def main():
                   f"({c.budget_bytes / 1e6:.2f} MB window)")
 
     results, driver = run_scenario(space, ground, pcfg, scenario,
-                                   fleet=not args.oracle, mesh=mesh)
+                                   fleet=not args.oracle, mesh=mesh,
+                                   async_ground=args.async_ground)
     if args.check:
         other, _ = run_scenario(space, ground, pcfg, scenario,
                                 fleet=args.oracle)
@@ -116,6 +126,12 @@ def main():
               f"dedup_batched={s['dedup_batched']}, "
               f"ingest {s['tiles_per_s']:.0f} tiles/s "
               f"({s['tiles_per_s_per_sat']:.0f}/sat)")
+        print(f"ground segment: {s['windows_served']} windows in "
+              f"{s['contact_s']:.2f}s ({s['windows_per_s']:.1f} windows/s, "
+              f"{s['bytes_downlinked_per_s'] / 1e6:.1f} MB/s downlinked)"
+              + (f"; async recount {s['recount_s']:.2f}s, "
+                 f"{s['recount_hidden_frac']:.0%} hidden behind ingest"
+                 if s["async_ground"] else ""))
     assert agg_bytes <= agg_budget + 1e-6, "byte overdraw"
     print(f"constellation aggregate count: pred={agg_pred:.0f} "
           f"true={agg_true:.0f} "

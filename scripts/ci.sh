@@ -20,8 +20,13 @@ python -m benchmarks.run kernels --strict --json BENCH_kernels_smoke.json
 echo "== example smoke: quickstart =="
 timeout 600 python examples/quickstart.py
 
-echo "== example smoke: constellation fleet path (2 sats, parity-checked) =="
-timeout 600 python examples/constellation_sim.py --sats 2 --rounds 2 --check
+echo "== example smoke: constellation fleet path (2 sats, parity-checked,"
+echo "   scenario-driven ContactPlans + overlapped ground recount) =="
+timeout 600 python examples/constellation_sim.py --sats 2 --rounds 2 --check \
+  --async-ground
+
+echo "== example smoke: collaborative serving on the ContactPlan stream =="
+timeout 600 python examples/serve_collaborative.py --passes 2 --overlap
 
 echo "== sharded fleet gates (4 forced host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
@@ -32,8 +37,10 @@ XLA_FLAGS="--xla_force_host_platform_device_count=2" \
   timeout 600 python examples/constellation_sim.py --sats 3 --rounds 2 \
   --devices 2 --check
 
-echo "== fleet bench smoke (tiny config, incl. sharded-path parity gate) =="
+echo "== fleet bench smoke (tiny config, incl. sharded-path parity gate"
+echo "   and the contact-plan batched/reference/async parity gate) =="
 FLEET_BENCH_SATS=2 FLEET_BENCH_ROUNDS=1 FLEET_BENCH_ITERS=1 \
   FLEET_BENCH_DEVICES=1,2 FLEET_BENCH_SHARD_SATS=3 \
+  FLEET_BENCH_STATIONS=2 FLEET_BENCH_CONTACT_SATS=3 \
   FLEET_BENCH_JSON=BENCH_fleet_smoke.json \
   timeout 900 python -m benchmarks.run fleet --strict

@@ -152,9 +152,11 @@ def count_tiles_multi(params, cfg, parts, batch: int = 64, score_thresh=0.3,
 
     Returns ``[(counts, conf), ...]`` aligned with ``parts``.
     """
-    idx_bucket = 8  # pad each part's gather to a multiple of this, so
-    #                 gather/concat shapes are bounded per bucket count
-    #                 instead of compiling per exact subset size
+    # pad each part's gather to a power-of-two bucket (floor 2): shapes
+    # stay log-bounded per part size AND tiny parts pack tightly — a
+    # 1-tile ground-recount window contributes 2 slots to the shared
+    # batch instead of the 8-slot floor a per-part forward would pay,
+    # which is where the batched contact tier beats the FIFO loop
     sizes = [int(len(idx)) for _, idx in parts]
     total = sum(sizes)
     empty = (np.zeros((0,), np.float32), np.zeros((0,), np.float32))
@@ -165,7 +167,7 @@ def count_tiles_multi(params, cfg, parts, batch: int = 64, score_thresh=0.3,
         if not k:
             spans.append((0, 0))
             continue
-        k_pad = -(-k // idx_bucket) * idx_bucket
+        k_pad = bucket_size(k, 2)
         idx_pad = np.zeros(k_pad, np.int64)  # pad slots gather tile 0,
         idx_pad[:k] = np.asarray(idx)        # trimmed after the forward
         gathered.append(jnp.asarray(tiles)[jnp.asarray(idx_pad)])

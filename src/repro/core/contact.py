@@ -1,0 +1,393 @@
+"""Declarative ground-segment contact tier: ContactPlan + the batched
+lane-stacked executor + the overlapped ground recount.
+
+The paper's satellite-ground collaboration (§III) runs on the *other*
+side of the downlink: ground stations offer contact windows, the
+selection policy decides what each window transmits, and the ground
+tier recounts what arrives. Until this module, the fleet executed that
+tier as a host-side Python loop — one scalar ``SelectionPolicy.select``
+call and one throttle dispatch per window — which is exactly where a
+100-station round stops scaling.
+
+Three pieces replace the loop:
+
+* :class:`ContactPlan` — a declarative description of ONE round's
+  windows as ``(n_windows,)`` satellite-index / byte-budget / station
+  arrays. Built from explicit windows (:meth:`ContactPlan.build`), the
+  fleet's rotating default (:meth:`ContactPlan.rotating`), or directly
+  from :mod:`repro.data.scenarios` contact events
+  (:meth:`ContactPlan.from_contacts`). Malformed windows — an
+  out-of-range satellite index, a NaN/negative/non-finite byte budget —
+  raise ``ValueError`` at *build* time instead of failing deep inside
+  the drain.
+
+* :func:`execute_plan` — the batched ground-segment core. Windows open
+  in plan order (budgets accrued in one vectorized
+  :meth:`~repro.core.energy.FleetLedger.accrue_window_budgets` op),
+  then the round drains in *steps*: at step ``p`` every window still
+  holding a ``p``-th pending segment forms one lane of a
+  :class:`~repro.core.policies.PolicyContextBatch`, Select runs as one
+  ``select_batch`` call per policy class (the two-threshold policies'
+  throttles collapse into ONE vmapped program), and Downlink charges
+  every lane through vectorized ledger ops. FIFO-within-window
+  semantics are preserved by construction: a window's remaining budget
+  is its plan budget minus the prefix sum of its earlier segments'
+  spends, and step ``p`` only ever sees that prefix — so the batched
+  planner is bit-identical to draining each window through the scalar
+  stage loop (:func:`execute_plan_reference`, differentially gated by
+  tests/test_contact.py at 0.0 deviation for all five policies).
+
+* :class:`GroundSegment` — the fleet's persistent contact executor.
+  The ground recounts of a round are batched across all windows
+  (shared fixed-shape counting batches, as before) and — with
+  ``overlap=True`` — run on a worker thread so round *k*'s recount
+  hides behind round *k+1*'s ingest dispatch (jax releases the GIL
+  while compiled programs execute, and CPU PJRT dispatch is async).
+  The overlap is exact: GroundRecount and Aggregate read only their own
+  segment's frozen selection, charge nothing, and
+  ``Fleet.results()/finalize()`` sync before reading predictions.
+  ``overlap=False`` (the default) is the synchronous fallback — same
+  arithmetic, inline.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cascade import count_tiles_multi
+from repro.core.mission import WindowReport, policy_context
+from repro.core.policies import PolicyContextBatch
+
+__all__ = ["ContactPlan", "GroundSegment", "execute_plan",
+           "execute_plan_reference"]
+
+
+@dataclass(frozen=True)
+class ContactPlan:
+    """One contact round, declaratively: lane-stacked window arrays.
+
+    ``sats[w]`` is window ``w``'s target satellite, ``budgets[w]`` its
+    byte budget, ``entitlement[w]`` True when the window offers the
+    satellite's pending entitlement instead of an explicit budget (the
+    ``budget_bytes=None`` semantics of the legacy API — ``budgets[w]``
+    is 0 and ignored there), and ``stations[w]`` a label for
+    reports/logs. Windows execute in array order; a satellite may
+    appear in several windows (the first drains its pending passes,
+    later ones find nothing and only offer budget).
+
+    Instances are validated — construct through :meth:`build`,
+    :meth:`rotating`, or :meth:`from_contacts`.
+    """
+
+    sats: np.ndarray         # (n_windows,) int64
+    budgets: np.ndarray      # (n_windows,) float64, finite and >= 0
+    entitlement: np.ndarray  # (n_windows,) bool
+    stations: Tuple[str, ...]
+    n_sats: int
+
+    @property
+    def n_windows(self) -> int:
+        return int(self.sats.shape[0])
+
+    def __post_init__(self):
+        sats = np.asarray(self.sats)
+        budgets = np.asarray(self.budgets, np.float64)
+        ent = np.asarray(self.entitlement, bool)
+        if not (sats.ndim == budgets.ndim == ent.ndim == 1
+                and sats.shape == budgets.shape == ent.shape):
+            raise ValueError(
+                "ContactPlan: sats/budgets/entitlement must be aligned "
+                f"1-D arrays, got shapes {sats.shape}/{budgets.shape}/"
+                f"{ent.shape}")
+        if len(self.stations) != sats.shape[0]:
+            raise ValueError(
+                f"ContactPlan: {len(self.stations)} station labels for "
+                f"{sats.shape[0]} windows")
+        if not np.issubdtype(sats.dtype, np.integer):
+            raise ValueError(
+                f"ContactPlan: satellite indices must be integers, got "
+                f"dtype {sats.dtype}")
+        if sats.size:
+            bad = (sats < 0) | (sats >= self.n_sats)
+            if bad.any():
+                w = int(np.flatnonzero(bad)[0])
+                raise ValueError(
+                    f"ContactPlan: window {w} targets satellite "
+                    f"{int(sats[w])}, outside the {self.n_sats}-satellite "
+                    f"fleet [0, {self.n_sats})")
+            explicit = ~ent
+            bad = explicit & ~np.isfinite(budgets)
+            if bad.any():
+                w = int(np.flatnonzero(bad)[0])
+                raise ValueError(
+                    f"ContactPlan: window {w} has a non-finite byte "
+                    f"budget ({budgets[w]}); use budget=None for the "
+                    f"pending-entitlement default")
+            bad = explicit & (budgets < 0.0)
+            if bad.any():
+                w = int(np.flatnonzero(bad)[0])
+                raise ValueError(
+                    f"ContactPlan: window {w} has a negative byte budget "
+                    f"({budgets[w]}); downlink budgets must be >= 0")
+        object.__setattr__(self, "sats", np.ascontiguousarray(sats, np.int64))
+        object.__setattr__(self, "budgets", np.ascontiguousarray(budgets))
+        object.__setattr__(self, "entitlement", np.ascontiguousarray(ent))
+        object.__setattr__(self, "stations", tuple(self.stations))
+
+    # -- builders -----------------------------------------------------------
+
+    @staticmethod
+    def build(windows: Sequence[Tuple[int, Optional[float]]], n_sats: int,
+              stations: Optional[Sequence[str]] = None) -> "ContactPlan":
+        """From explicit ``[(sat, budget_bytes_or_None), ...]`` windows
+        (the legacy ``Fleet.contact_round(windows=...)`` shape)."""
+        sats = np.array([w[0] for w in windows], np.int64) \
+            if windows else np.zeros(0, np.int64)
+        ent = np.array([w[1] is None for w in windows], bool) \
+            if windows else np.zeros(0, bool)
+        budgets = np.array([0.0 if w[1] is None else w[1] for w in windows],
+                           np.float64) if windows else np.zeros(0)
+        if stations is None:
+            stations = tuple(f"w{i}" for i in range(len(windows)))
+        return ContactPlan(sats=sats, budgets=budgets, entitlement=ent,
+                           stations=tuple(stations), n_sats=int(n_sats))
+
+    @staticmethod
+    def rotating(n_sats: int, stations: int, start: int = 0,
+                 budget_bytes: Optional[float] = None
+                 ) -> Tuple["ContactPlan", int]:
+        """The rotating default: the next ``stations`` satellites
+        round-robin from ``start``, each offered ``budget_bytes``
+        (None = pending entitlement). Returns ``(plan, next_start)`` so
+        the caller can carry the rotation pointer across rounds."""
+        wins, ptr = [], int(start)
+        for _ in range(int(stations)):
+            wins.append((ptr, budget_bytes))
+            ptr = (ptr + 1) % int(n_sats)
+        return (ContactPlan.build(
+            wins, n_sats,
+            stations=tuple(f"gs{i}" for i in range(len(wins)))), ptr)
+
+    @staticmethod
+    def from_contacts(contacts, n_sats: int) -> "ContactPlan":
+        """From :class:`repro.data.scenarios.ContactEvent` objects — the
+        scenario generator's per-round contact schedule becomes the
+        round's plan directly."""
+        return ContactPlan(
+            sats=np.array([c.sat for c in contacts], np.int64),
+            budgets=np.array([c.budget_bytes for c in contacts], np.float64),
+            entitlement=np.zeros(len(contacts), bool),
+            stations=tuple(c.station.name for c in contacts),
+            n_sats=int(n_sats))
+
+    def window_budget(self, w: int) -> Optional[float]:
+        """Window ``w``'s budget in the scalar API's terms
+        (None = pending entitlement)."""
+        return None if self.entitlement[w] else float(self.budgets[w])
+
+
+# ---------------------------------------------------------------------------
+# the batched executor core
+# ---------------------------------------------------------------------------
+
+def _select_downlink(fleet, plan: ContactPlan):
+    """The synchronous half of a batched round: open every window, then
+    drain Select + Downlink step-wise across lanes.
+
+    Returns ``(out, jobs)`` — the per-window ``(sat, WindowReport)``
+    list (complete: reports never depend on the recount) and the jobs
+    whose GroundRecount + Aggregate still have to run.
+    """
+    out: List[Optional[Tuple[int, WindowReport]]] = [None] * plan.n_windows
+    jobs = []  # (slot, sat, mission, window, segs) — batched lanes
+    open_sats, open_budgets = [], []
+    for w in range(plan.n_windows):
+        sat = int(plan.sats[w])
+        m = fleet.missions[sat]
+        if not fleet._contact_batchable[sat]:
+            # custom stage graphs / reference-path satellites take the
+            # exact scalar window drain, in plan order
+            out[w] = (sat, m.contact_window(plan.window_budget(w)))
+            continue
+        if m._window_is_noop():
+            out[w] = (sat, m._drained_window_report())
+            continue
+        segs, window = m._open_window(plan.window_budget(w), accrue=False)
+        open_sats.append(sat)
+        open_budgets.append(window.budget)
+        jobs.append((w, sat, m, window, segs))
+    if open_sats:
+        fleet.ledger.accrue_window_budgets(open_sats, open_budgets)
+
+    depth = max((len(segs) for *_, segs in jobs), default=0)
+    for p in range(depth):
+        lanes = [(sat, m, window, segs[p])
+                 for _, sat, m, window, segs in jobs if len(segs) > p]
+        # --- Select: one select_batch per policy class; each lane's
+        # budget is its window's remaining prefix ---
+        by_cls: Dict[type, list] = {}
+        for lane in lanes:
+            by_cls.setdefault(type(lane[1].policy), []).append(lane)
+        for group in by_cls.values():
+            ctxs = [policy_context(m, seg) for _, m, _, seg in group]
+            batch = PolicyContextBatch.stack(
+                ctxs, policies=[m.policy for _, m, _, seg in group],
+                sharding=fleet.sharding)
+            budgets = np.array([window.remaining
+                                for _, _, window, _ in group], np.float64)
+            sb = group[0][1].policy.select_batch(batch, budgets)
+            for (_, _, _, seg), sel in zip(group, sb.selections):
+                seg.selection = sel
+        # --- Downlink: per-lane spend caps on the host (python-float
+        # min, exactly the scalar stage), ledger charges vectorized ---
+        sats_v, reqs, spends, bws = [], [], [], []
+        for sat, m, window, seg in lanes:
+            sel = seg.selection
+            spend = min(sel.bytes_requested, window.remaining)
+            window.remaining -= spend
+            seg.bytes_requested = sel.bytes_requested
+            seg.bytes_spent = spend
+            sats_v.append(sat)
+            reqs.append(sel.bytes_requested)
+            spends.append(spend)
+            bws.append(m.pcfg.bandwidth_mbps)
+        fleet.ledger.charge_downlink_windows(sats_v, reqs, spends, bws)
+
+    for slot, sat, m, window, segs in jobs:
+        out[slot] = (sat, m._window_report(window, segs))
+    return out, jobs
+
+
+def _recount_aggregate(fleet, jobs) -> None:
+    """The deferrable half: ground recounts of EVERY window in the
+    round share fixed-shape counting batches (grouped per threshold),
+    then Aggregate fuses predictions. Reads only each segment's frozen
+    selection and charges nothing — safe to overlap with the next
+    round's ingest."""
+    by_thresh: Dict[float, list] = {}
+    for _, _, m, _, segs in jobs:
+        for seg in segs:
+            by_thresh.setdefault(m.pcfg.score_thresh, []).append((m, seg))
+    params, cfg = fleet.ground
+    for thresh, items in by_thresh.items():
+        parts = [(seg.tiles_gd, seg.selection.downlink) for _, seg in items]
+        results = count_tiles_multi(params, cfg, parts, score_thresh=thresh,
+                                    sharding=fleet.sharding)
+        for (m, seg), (c, _) in zip(items, results):
+            counts_gd = np.zeros(seg.n)
+            down = seg.selection.downlink
+            if len(down):
+                counts_gd[down] = c
+            seg.counts_gd = counts_gd[seg.rep_of]
+    for _, _, m, window, segs in jobs:
+        for seg in segs:
+            m.contact_stages[3].run(m, seg, window)  # Aggregate
+
+
+def execute_plan(fleet, plan: ContactPlan,
+                 recount_inline: bool = True):
+    """Run one ContactPlan through the batched core. With
+    ``recount_inline=False`` the recount jobs are returned instead of
+    executed (the :class:`GroundSegment` overlap path).
+
+    Returns ``(out, jobs)``.
+    """
+    out, jobs = _select_downlink(fleet, plan)
+    if recount_inline and jobs:
+        _recount_aggregate(fleet, jobs)
+        jobs = []
+    return out, jobs
+
+
+def execute_plan_reference(fleet, plan: ContactPlan):
+    """The FIFO-loop reference: every window drains sequentially
+    through the scalar Mission stage loop (Select -> Downlink ->
+    GroundRecount -> Aggregate per segment) — the pre-plan contact tier,
+    kept as the parity oracle and the bench baseline the batched
+    executor is gated against (max deviation 0.0)."""
+    return [(int(plan.sats[w]),
+             fleet.missions[int(plan.sats[w])].contact_window(
+                 plan.window_budget(w)))
+            for w in range(plan.n_windows)]
+
+
+# ---------------------------------------------------------------------------
+# overlapped ground recount
+# ---------------------------------------------------------------------------
+
+class GroundSegment:
+    """A fleet's persistent ground-segment executor.
+
+    Owns the deferred-recount state: with ``overlap=True``,
+    :meth:`execute` returns after Select + Downlink (reports complete,
+    budget state final) and runs the round's batched GroundRecount +
+    Aggregate on a worker thread, so the recount of round *k* hides
+    behind whatever the caller does next — typically round *k+1*'s
+    ingest dispatch. :meth:`sync` joins (and re-raises worker
+    exceptions); ``Fleet.results()/finalize()`` and the next
+    :meth:`execute` call it implicitly, so predictions are never read
+    while a recount is in flight. ``overlap=False`` recounts inline —
+    the synchronous fallback, bit-identical output either way.
+
+    Wall-time accounting for the bench/summary: ``recount_s`` is the
+    cumulative recount time (worker wall when overlapped, inline wall
+    when not), ``wait_s`` the time :meth:`sync` actually blocked.
+    ``hidden_fraction`` = 1 - wait/recount is the share of recount time
+    the overlap hid behind foreground work.
+    """
+
+    def __init__(self, fleet, overlap: bool = False):
+        self.fleet = fleet
+        self.overlap = bool(overlap)
+        self._thread: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+        self.recount_s = 0.0
+        self.wait_s = 0.0
+        self.rounds_deferred = 0
+
+    def execute(self, plan: ContactPlan):
+        self.sync()
+        out, jobs = execute_plan(self.fleet, plan,
+                                 recount_inline=not self.overlap)
+        if jobs:  # overlap path: defer the recount
+            self.rounds_deferred += 1
+            self._thread = threading.Thread(
+                target=self._recount_job, args=(jobs,), daemon=True)
+            self._thread.start()
+        return out
+
+    def execute_reference(self, plan: ContactPlan):
+        self.sync()
+        return execute_plan_reference(self.fleet, plan)
+
+    def _recount_job(self, jobs):
+        t0 = time.perf_counter()
+        try:
+            _recount_aggregate(self.fleet, jobs)
+        except BaseException as e:  # surfaced at the next sync()
+            self._err = e
+        finally:
+            self.recount_s += time.perf_counter() - t0
+
+    def sync(self) -> None:
+        """Join any in-flight recount; re-raise its exception here."""
+        if self._thread is not None:
+            t0 = time.perf_counter()
+            self._thread.join()
+            self.wait_s += time.perf_counter() - t0
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    @property
+    def hidden_fraction(self) -> float:
+        """Share of deferred-recount wall time hidden behind foreground
+        work (0.0 when nothing was deferred)."""
+        if not self.rounds_deferred or self.recount_s <= 0.0:
+            return 0.0
+        return max(1.0 - self.wait_s / self.recount_s, 0.0)

@@ -227,6 +227,34 @@ class FleetLedger:
         seconds = np.asarray(n_bytes, np.float64) * 8.0 / (bandwidth_mbps * 1e6)
         self.e_down += seconds * RADIO_POWER_W
 
+    # -- vectorized contact-window ops (batched ContactPlan execution) ------
+    #
+    # These index by WINDOW, not by lane: ``sats`` may repeat a lane when
+    # one satellite gets several windows in a round. ``np.add.at`` is
+    # unbuffered and applies in index order, so a repeated lane sees the
+    # exact float64 addition sequence the scalar per-window accrual
+    # produces — vectorization never reassociates a lane's ledger.
+
+    def accrue_window_budgets(self, sats, budgets):
+        """Offer one round's window byte budgets (plan order)."""
+        np.add.at(self.bytes_budget, np.asarray(sats, np.int64),
+                  np.asarray(budgets, np.float64))
+
+    def charge_downlink_windows(self, sats, requested, spends,
+                                bandwidth_mbps):
+        """One drain step's Downlink charges for every serving lane:
+        requested/spent byte accounting plus the radio-energy spend, all
+        with the per-lane IEEE arithmetic of the scalar
+        :meth:`EnergyLedger.charge_downlink`."""
+        sats = np.asarray(sats, np.int64)
+        spends = np.asarray(spends, np.float64)
+        np.add.at(self.bytes_requested, sats,
+                  np.asarray(requested, np.float64))
+        np.add.at(self.bytes_spent, sats, spends)
+        seconds = spends * 8.0 / (np.asarray(bandwidth_mbps, np.float64)
+                                  * 1e6)
+        np.add.at(self.e_down, sats, seconds * RADIO_POWER_W)
+
     # -- per-satellite Mission-compatible views -----------------------------
 
     def energy_view(self, sat: int) -> SatEnergyView:

@@ -27,11 +27,21 @@ RoiFilter / Select stay per-satellite host bookkeeping (cheap masks over
 the fused statistics) and reuse the bucketed compiled programs, which
 are shared across the fleet by construction.
 
-Contact rounds batch too: Select + Downlink run strictly FIFO per
-window (the byte budget drains segment by segment), then the ground
-recounts of every window in the round share counting batches, and
-Aggregate runs last — a reordering that is exact because GroundRecount
-and Aggregate read only their own segment's selection.
+Contact rounds run the batched ContactPlan core
+(:mod:`repro.core.contact`): a round's windows become a declarative,
+validated :class:`~repro.core.contact.ContactPlan`; Select executes as
+lane-stacked ``select_batch`` programs across the round's windows (the
+two-threshold throttles collapse into one vmapped call per drain
+step), Downlink charges through vectorized :class:`FleetLedger` window
+ops, and the ground recounts of every window share counting batches —
+optionally deferred to a worker thread (``async_ground=True``) so
+round *k*'s recount overlaps round *k+1*'s ingest dispatch.
+FIFO-within-window byte semantics are preserved exactly (a window's
+remaining budget is its plan budget minus the prefix sum of its
+earlier segments' spends), so the batched planner is bit-equal to
+draining every window through the scalar stage loop
+(:meth:`Fleet.contact_round_reference`; tests/test_contact.py gates
+all five policies at 0.0 deviation).
 
 The executed arithmetic is IDENTICAL to running N independent
 :class:`~repro.core.mission.Mission` objects: every batched program is
@@ -42,9 +52,11 @@ the looped-Mission oracle (:func:`run_scenario` with ``fleet=False``)
 for all registered policies.
 
 Contact windows rotate: :meth:`Fleet.contact_round` serves the next
-``stations`` satellites round-robin (or an explicit ``windows`` list
-from a :class:`~repro.data.scenarios.FleetScenario`), each draining its
-pending passes FIFO through its policy's selection.
+``stations`` satellites round-robin, or takes an explicit ``windows``
+list, or — preferred — a :class:`~repro.core.contact.ContactPlan`
+(e.g. a scenario round's contact events via
+``Round.contact_plan(n)``); each window drains its satellite's pending
+passes FIFO through its policy's selection.
 
 Scaling past one accelerator: ``Fleet(..., mesh=...)`` threads a
 :class:`~repro.core.fleet_sharding.FleetSharding` context through the
@@ -68,6 +80,7 @@ import numpy as np
 import repro.core.dedup as dd
 from repro.core import engine
 from repro.core.cascade import count_tiles_multi
+from repro.core.contact import ContactPlan, GroundSegment
 from repro.core.energy import (FleetLedger, max_tiles_within_budget,
                                max_tiles_within_budget_vec)
 from repro.core.fleet_sharding import FleetSharding
@@ -103,10 +116,19 @@ class Fleet:
         vmapped multi-satellite dedup core (no per-sat Python loop);
         bit-equal on CPU (test-enforced; documented tolerance 0.0), may
         reassociate on other backends.
+    async_ground : ``True`` defers each contact round's batched ground
+        recount to a worker thread so it overlaps the next round's
+        ingest dispatch (:class:`~repro.core.contact.GroundSegment`;
+        ``results()``/``finalize()`` sync first). ``False`` (default)
+        recounts inline — same arithmetic, synchronous.
+    contact_reference : ``True`` pins EVERY contact round (including the
+        ``finalize`` flush) to the scalar FIFO-loop reference path —
+        the parity oracle / bench baseline of the batched planner.
     """
 
     def __init__(self, space, ground, pcfg=None, n_sats: Optional[int] = None,
-                 energy_cfgs=None, mesh=None, strict_parity: bool = False):
+                 energy_cfgs=None, mesh=None, strict_parity: bool = False,
+                 async_ground: bool = False, contact_reference: bool = False):
         if isinstance(pcfg, (list, tuple)):
             pcfgs = list(pcfg)
             if n_sats is not None and n_sats != len(pcfgs):
@@ -140,8 +162,12 @@ class Fleet:
         self._batchable = [self._can_batch(m) for m in self.missions]
         self._contact_batchable = [self._can_batch_contact(m)
                                    for m in self.missions]
+        self.ground_segment = GroundSegment(self, overlap=async_ground)
+        self.contact_reference = bool(contact_reference)
         self._ingest_s = 0.0       # cumulative ingest wall time
         self._tiles_ingested = 0   # for summary() throughput
+        self._contact_s = 0.0      # cumulative contact-round wall time
+        self._windows_served = 0   # across all contact rounds
 
     @staticmethod
     def _can_batch(m: Mission) -> bool:
@@ -361,72 +387,77 @@ class Fleet:
                 seg.conf = conf[seg.rep_of]
                 seg.processed = np.isin(seg.rep_of, process[i]) & seg.active
 
+    def _resolve_plan(self, windows, stations, budget_bytes, plan
+                      ) -> ContactPlan:
+        """Normalize the three contact-round input shapes into ONE
+        validated :class:`~repro.core.contact.ContactPlan` (malformed
+        windows fail here, at plan-build time, not deep in the drain)."""
+        if plan is not None:
+            if windows is not None:
+                raise ValueError("pass either plan= or windows=, not both")
+            if plan.n_sats != self.n_sats:
+                raise ValueError(
+                    f"plan is for a {plan.n_sats}-satellite fleet; this "
+                    f"fleet has {self.n_sats}")
+            return plan
+        if windows is not None:
+            return ContactPlan.build(windows, self.n_sats)
+        plan, self._station = ContactPlan.rotating(
+            self.n_sats, stations, start=self._station,
+            budget_bytes=budget_bytes)
+        return plan
+
     def contact_round(self, windows: Optional[Sequence[Tuple[int, float]]]
                       = None, stations: int = 1,
-                      budget_bytes: Optional[float] = None
+                      budget_bytes: Optional[float] = None, *,
+                      plan: Optional[ContactPlan] = None
                       ) -> List[Tuple[int, WindowReport]]:
-        """One ground-contact round.
+        """One ground-contact round, executed by the batched ContactPlan
+        core (:mod:`repro.core.contact`).
 
-        Default: the next ``stations`` satellites (round-robin from the
-        rotating pointer) each get a window of ``budget_bytes`` (None =
-        their pending entitlement); with more stations than satellites
-        the rotation wraps, so a satellite can get several windows in
-        one round. Pass explicit ``windows`` as
-        ``[(sat, budget_bytes), ...]`` — e.g. a scenario round's contact
-        events — to override the rotation. Each window drains that
-        satellite's pending passes FIFO through its selection policy.
-        Returns ``[(sat, WindowReport), ...]`` in window order (a
-        satellite may get several windows in one round).
+        Pass a declarative ``plan`` (explicit windows, a scenario
+        round's contact events via
+        :meth:`ContactPlan.from_contacts`, or any builder output); or
+        the legacy shapes — explicit ``windows`` as
+        ``[(sat, budget_bytes), ...]``, or the rotating default: the
+        next ``stations`` satellites (round-robin from the rotating
+        pointer) each get a window of ``budget_bytes`` (None = their
+        pending entitlement; with more stations than satellites the
+        rotation wraps, so a satellite can get several windows in one
+        round). Each window drains that satellite's pending passes FIFO
+        through its selection policy — Select runs as lane-stacked
+        ``select_batch`` calls across the round's windows, Downlink
+        charges through vectorized ledger ops, and the ground recounts
+        share fixed-shape counting batches (deferred to overlap the
+        next round's ingest when the fleet was built with
+        ``async_ground=True``). Bit-equal to draining each window
+        through the scalar stage loop (:meth:`contact_round_reference`).
+        Returns ``[(sat, WindowReport), ...]`` in window order.
         """
-        if windows is None:
-            windows = []
-            for _ in range(stations):
-                windows.append((self._station, budget_bytes))
-                self._station = (self._station + 1) % self.n_sats
-        # Select + Downlink stay strictly FIFO per window (the byte
-        # budget drains segment by segment); the ground recounts of ALL
-        # windows in the round are then counted in shared batches, and
-        # Aggregate runs last. Reordering is exact: GroundRecount and
-        # Aggregate read only their own segment's selection.
-        out: List[Optional[Tuple[int, WindowReport]]] = []
-        jobs = []  # (slot, sat, mission, window, segs)
-        for sat, budget in windows:
-            m = self.missions[sat]
-            if not self._contact_batchable[sat]:
-                out.append((sat, m.contact_window(budget)))
-                continue
-            if m._window_is_noop():
-                out.append((sat, m._drained_window_report()))
-                continue
-            segs, window = m._open_window(budget)
-            for seg in segs:
-                m.contact_stages[0].run(m, seg, window)  # Select
-                m.contact_stages[1].run(m, seg, window)  # Downlink
-            out.append(None)  # filled after the batched recount
-            jobs.append((len(out) - 1, sat, m, window, segs))
+        if self.contact_reference:  # constructor-pinned reference mode
+            return self.contact_round_reference(
+                windows, stations, budget_bytes, plan=plan)
+        plan = self._resolve_plan(windows, stations, budget_bytes, plan)
+        t0 = time.perf_counter()
+        out = self.ground_segment.execute(plan)
+        self._contact_s += time.perf_counter() - t0
+        self._windows_served += plan.n_windows
+        return out
 
-        by_thresh: Dict[float, list] = {}
-        for _, sat, m, window, segs in jobs:
-            for seg in segs:
-                by_thresh.setdefault(m.pcfg.score_thresh, []).append((m, seg))
-        params, cfg = self.ground
-        for thresh, items in by_thresh.items():
-            parts = [(seg.tiles_gd, seg.selection.downlink)
-                     for _, seg in items]
-            results = count_tiles_multi(params, cfg, parts,
-                                        score_thresh=thresh,
-                                        sharding=self.sharding)
-            for (m, seg), (c, _) in zip(items, results):
-                counts_gd = np.zeros(seg.n)
-                down = seg.selection.downlink
-                if len(down):
-                    counts_gd[down] = c
-                seg.counts_gd = counts_gd[seg.rep_of]
-
-        for slot, sat, m, window, segs in jobs:
-            for seg in segs:
-                m.contact_stages[3].run(m, seg, window)  # Aggregate
-            out[slot] = (sat, m._window_report(window, segs))
+    def contact_round_reference(
+            self, windows: Optional[Sequence[Tuple[int, float]]] = None,
+            stations: int = 1, budget_bytes: Optional[float] = None, *,
+            plan: Optional[ContactPlan] = None
+            ) -> List[Tuple[int, WindowReport]]:
+        """:meth:`contact_round` through the FIFO-loop reference path:
+        every window drains sequentially through the scalar Mission
+        stage loop. The parity oracle (and bench baseline) the batched
+        planner is gated against at 0.0 deviation."""
+        plan = self._resolve_plan(windows, stations, budget_bytes, plan)
+        t0 = time.perf_counter()
+        out = self.ground_segment.execute_reference(plan)
+        self._contact_s += time.perf_counter() - t0
+        self._windows_served += plan.n_windows
         return out
 
     def finalize(self) -> List[PipelineResult]:
@@ -441,6 +472,7 @@ class Fleet:
         return self.results()
 
     def results(self) -> List[PipelineResult]:
+        self.ground_segment.sync()  # deferred recounts land before reads
         return [m.result() for m in self.missions]
 
     @property
@@ -451,11 +483,16 @@ class Fleet:
         """Fleet-aggregate scalars (per-satellite results summed) plus
         the runtime facts benches and examples used to recompute ad hoc:
         the device-mesh width, whether ingest ran the batched
-        (vmapped/no-per-sat-loop) dedup core, and ingest throughput
-        (cumulative wall time of :meth:`ingest` calls)."""
+        (vmapped/no-per-sat-loop) dedup core, ingest throughput
+        (cumulative wall time of :meth:`ingest` calls), and the
+        contact-tier mirror — cumulative :meth:`contact_round` wall
+        time, window/byte throughput, and the overlapped-recount
+        accounting of the :class:`~repro.core.contact.GroundSegment`."""
         rs = self.results()
         tps = (self._tiles_ingested / self._ingest_s
                if self._ingest_s > 0 else 0.0)
+        gseg = self.ground_segment
+        bytes_spent = float(self.ledger.bytes_spent[:self.n_sats].sum())
         return {
             "n_sats": self.n_sats,
             "n_devices": self.sharding.n_devices,
@@ -463,6 +500,16 @@ class Fleet:
             "ingest_s": self._ingest_s,
             "tiles_per_s": tps,
             "tiles_per_s_per_sat": tps / self.n_sats,
+            "contact_s": self._contact_s,
+            "windows_served": self._windows_served,
+            "windows_per_s": (self._windows_served / self._contact_s
+                              if self._contact_s > 0 else 0.0),
+            "bytes_downlinked_per_s": (bytes_spent / self._contact_s
+                                       if self._contact_s > 0 else 0.0),
+            "async_ground": gseg.overlap,
+            "recount_s": gseg.recount_s,
+            "recount_wait_s": gseg.wait_s,
+            "recount_hidden_frac": gseg.hidden_fraction,
             "total_true": sum(r.total_true for r in rs),
             "total_pred": sum(r.total_pred for r in rs),
             "tiles_total": sum(r.tiles_total for r in rs),
@@ -471,7 +518,7 @@ class Fleet:
             # sum REAL lanes only: pad lanes hold zeros, but including
             # them changes numpy's pairwise-summation tree and shifts
             # the aggregate by an ulp vs the unpadded fleet
-            "bytes_spent": float(self.ledger.bytes_spent[:self.n_sats].sum()),
+            "bytes_spent": bytes_spent,
             "bytes_budget": float(self.ledger.bytes_budget[:self.n_sats].sum()),
             "energy_spent_j": float(self.ledger.spent[:self.n_sats].sum()),
             "energy_budget_j": float(self.ledger.budget_j[:self.n_sats].sum()),
@@ -479,11 +526,17 @@ class Fleet:
 
 
 def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
-                 energy_cfgs=None, mesh=None, strict_parity: bool = False):
+                 energy_cfgs=None, mesh=None, strict_parity: bool = False,
+                 async_ground: bool = False, contact_reference: bool = False):
     """Execute a :class:`~repro.data.scenarios.FleetScenario`.
 
     ``fleet=True`` runs the constellation-batched :class:`Fleet` path
-    (optionally sharded along a ``sats`` device ``mesh``);
+    (optionally sharded along a ``sats`` device ``mesh``), driving each
+    round's contact events as a declarative
+    :class:`~repro.core.contact.ContactPlan`; ``async_ground=True``
+    additionally overlaps every round's ground recount with the next
+    round's ingest, and ``contact_reference=True`` swaps the batched
+    planner for the scalar FIFO-loop reference (the bench baseline).
     ``fleet=False`` runs the looped-Mission parity oracle — one
     sequential ``Mission`` per satellite fed the identical event order.
     Returns ``(per_sat_results, driver)`` where ``driver`` is the Fleet
@@ -492,12 +545,13 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
     n = scenario.spec.n_sats
     if fleet:
         fl = Fleet(space, ground, pcfg, n_sats=n, energy_cfgs=energy_cfgs,
-                   mesh=mesh, strict_parity=strict_parity)
+                   mesh=mesh, strict_parity=strict_parity,
+                   async_ground=async_ground,
+                   contact_reference=contact_reference)
         for rnd in scenario.rounds:
             fl.ingest(rnd.frames_per_sat(n), rnd.harvest_per_sat(n))
             if rnd.contacts:
-                fl.contact_round(windows=[(c.sat, c.budget_bytes)
-                                          for c in rnd.contacts])
+                fl.contact_round(plan=rnd.contact_plan(n))
         return fl.finalize(), fl
     pcfgs = (list(pcfg) if isinstance(pcfg, (list, tuple))
              else [pcfg] * n)

@@ -9,6 +9,13 @@ SPMD program: each device runs the identical per-sample arithmetic on
 its shard of the constellation, and XLA inserts no cross-device
 collectives because nothing couples lanes.
 
+The batched ground segment rides the same axis: a ContactPlan drain
+step's lane-stacked throttle call
+(:func:`repro.core.throttle.throttle_padded_batch`) and the shared
+ground-recount batches place their leading *window-lane* axis along the
+mesh too — contact lanes, like satellite lanes, never couple, so the
+placement is pure SPMD and per-lane masks are unchanged.
+
 :class:`FleetSharding` is the placement context threaded through
 ``fleet.py`` / ``engine.py`` / ``cascade.py`` / ``energy.py``. It
 follows the off-mesh no-op pattern of :mod:`repro.sharding.ctx`: built

@@ -282,6 +282,16 @@ class OnboardCount(Stage):
         seg.processed = np.isin(seg.rep_of, process) & seg.active
 
 
+def policy_context(mission: "Mission", seg: Segment) -> PolicyContext:
+    """Selection-time view of one segment — shared by the scalar Select
+    stage and the batched ContactPlan executor's lane stacking, so both
+    paths hand the policy bit-identical inputs."""
+    return PolicyContext(n=seg.n, active=seg.active, rep_of=seg.rep_of,
+                         conf=seg.conf, counts_sp=seg.counts_sp,
+                         processed=seg.processed,
+                         tile_bytes=mission.tile_bytes, pcfg=mission.pcfg)
+
+
 class Select(Stage):
     """Delegate the accept/transmit/credit decision to the registered
     :class:`~repro.core.policies.SelectionPolicy`."""
@@ -289,12 +299,9 @@ class Select(Stage):
     name = "select"
 
     def run(self, mission, seg, window=None):
-        ctx = PolicyContext(n=seg.n, active=seg.active, rep_of=seg.rep_of,
-                            conf=seg.conf, counts_sp=seg.counts_sp,
-                            processed=seg.processed,
-                            tile_bytes=mission.tile_bytes, pcfg=mission.pcfg)
         budget = window.remaining if window is not None else 0.0
-        seg.selection = mission.policy.select(ctx, budget)
+        seg.selection = mission.policy.select(policy_context(mission, seg),
+                                              budget)
 
 
 class Downlink(Stage):
@@ -459,15 +466,22 @@ class Mission:
         return WindowReport(budget_bytes=0.0, bytes_requested=0.0,
                             bytes_spent=0.0, tiles_downlinked=0, segments=0)
 
-    def _open_window(self, budget_bytes):
+    def _open_window(self, budget_bytes, accrue: bool = True):
         """Pop the pending segments and accrue one window's byte budget
-        (default: the pending segments' accumulated entitlement)."""
+        (default: the pending segments' accumulated entitlement).
+
+        ``accrue=False`` skips the byte-ledger accrual: the batched
+        ContactPlan executor opens a whole round's windows first and
+        accrues every lane in one vectorized
+        :meth:`~repro.core.energy.FleetLedger.accrue_window_budgets` op
+        (per-lane addition order unchanged — see that method)."""
         segs, self._pending = self._pending, []
         if budget_bytes is None:
             budget_bytes = sum(s.byte_entitlement for s in segs)
         window = ContactWindow(budget=float(budget_bytes),
                                remaining=float(budget_bytes))
-        self.bytes_ledger.budget += window.budget
+        if accrue:
+            self.bytes_ledger.budget += window.budget
         return segs, window
 
     @staticmethod

@@ -31,14 +31,14 @@ inside the two-threshold policies.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import TYPE_CHECKING, Dict, Type
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Dict, List, Sequence, Tuple, Type
 
 import jax.numpy as jnp
 import numpy as np
 
 import repro.core.dedup as dd
-from repro.core.throttle import throttle, throttle_padded
+from repro.core.throttle import throttle, throttle_padded, throttle_padded_batch
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.pipeline import PipelineConfig
@@ -68,8 +68,103 @@ class Selection:
     #                            window budget; the ledger charges capped)
 
 
+@dataclass
+class PolicyContextBatch:
+    """Lane-stacked :class:`PolicyContext`: L contact-window lanes' worth
+    of segment state as (L, n_max) padded arrays.
+
+    This is the batched ground-segment core's view of one drain step —
+    one lane per window currently serving a segment. Pad slots (columns
+    past each lane's ``n``) are inert: ``active``/``processed`` False,
+    ``conf`` -1, ``rep_of`` -1. ``lane(i)`` recovers the exact scalar
+    :class:`PolicyContext` of lane ``i`` (row slices of the stack are
+    bit-equal copies of the segment arrays), which is what keeps the
+    batched planner's selections bit-identical to the scalar FIFO path.
+
+    ``policies`` carries each lane's own policy *instance*: the default
+    :meth:`SelectionPolicy.select_batch` adapter dispatches through it,
+    so stateful third-party plugins keep per-mission state even when
+    lanes of the same class are grouped into one batch.
+    """
+
+    n: np.ndarray            # (L,) int64 per-lane tile counts
+    active: np.ndarray       # (L, n_max) bool
+    rep_of: np.ndarray       # (L, n_max) int64 (pad slots -1)
+    conf: np.ndarray         # (L, n_max) f64   (pad slots -1)
+    counts_sp: np.ndarray    # (L, n_max) f64
+    processed: np.ndarray    # (L, n_max) bool
+    tile_bytes: np.ndarray   # (L,) f64
+    pcfgs: Tuple             # per-lane PipelineConfig
+    policies: Tuple          # per-lane SelectionPolicy instances
+    sharding: object = None  # optional FleetSharding for the jax stages
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.pcfgs)
+
+    @classmethod
+    def stack(cls, ctxs: Sequence[PolicyContext],
+              policies: Sequence["SelectionPolicy"],
+              sharding=None) -> "PolicyContextBatch":
+        L = len(ctxs)
+        n = np.array([c.n for c in ctxs], np.int64)
+        n_max = max(int(n.max()) if L else 0, 1)
+
+        def pack(fld, dtype, fill):
+            out = np.full((L, n_max), fill, dtype)
+            for i, c in enumerate(ctxs):
+                out[i, :c.n] = getattr(c, fld)
+            return out
+
+        return cls(
+            n=n,
+            active=pack("active", bool, False),
+            rep_of=pack("rep_of", np.int64, -1),
+            conf=pack("conf", np.float64, -1.0),
+            counts_sp=pack("counts_sp", np.float64, 0.0),
+            processed=pack("processed", bool, False),
+            tile_bytes=np.array([c.tile_bytes for c in ctxs], np.float64),
+            pcfgs=tuple(c.pcfg for c in ctxs),
+            policies=tuple(policies),
+            sharding=sharding)
+
+    def lane(self, i: int) -> PolicyContext:
+        """Scalar view of lane ``i`` (unpadded row slices)."""
+        n = int(self.n[i])
+        return PolicyContext(
+            n=n, active=self.active[i, :n], rep_of=self.rep_of[i, :n],
+            conf=self.conf[i, :n], counts_sp=self.counts_sp[i, :n],
+            processed=self.processed[i, :n],
+            tile_bytes=float(self.tile_bytes[i]), pcfg=self.pcfgs[i])
+
+
+@dataclass
+class SelectionBatch:
+    """Lane-aligned select_batch output: per-lane :class:`Selection`
+    objects plus the stacked byte-request vector the vectorized Downlink
+    charge consumes."""
+
+    selections: List[Selection]
+    bytes_requested: np.ndarray = field(default=None)  # (L,) f64
+
+    def __post_init__(self):
+        if self.bytes_requested is None:
+            self.bytes_requested = np.array(
+                [s.bytes_requested for s in self.selections], np.float64)
+
+
 class SelectionPolicy:
-    """Base plugin: stage wants + the selection decision."""
+    """Base plugin: stage wants + the selection decision.
+
+    :meth:`select` is the scalar contract (one segment, one budget).
+    :meth:`select_batch` is the lane-stacked contract the batched
+    ground-segment core drives; the base implementation adapts any
+    scalar policy by draining the lanes through each lane's own
+    ``select`` — third-party plugins keep working unmodified — while
+    the built-ins override it with native lane-stacked programs
+    (bit-identical to the scalar path, differentially gated by
+    tests/test_contact.py).
+    """
 
     name = "?"
     wants_roi = False       # run the ROI variance filter for this policy
@@ -78,6 +173,15 @@ class SelectionPolicy:
 
     def select(self, ctx: PolicyContext, budget_bytes: float) -> Selection:
         raise NotImplementedError
+
+    def select_batch(self, batch: PolicyContextBatch,
+                     budgets: np.ndarray) -> SelectionBatch:
+        """Default adapter: scalar ``select`` per lane, dispatched
+        through each lane's own policy instance (stateful third-party
+        policies see exactly the calls the FIFO loop would make)."""
+        return SelectionBatch([
+            batch.policies[i].select(batch.lane(i), float(budgets[i]))
+            for i in range(batch.n_lanes)])
 
 
 _REGISTRY: Dict[str, Type[SelectionPolicy]] = {}
@@ -114,9 +218,23 @@ def available_policies() -> tuple:
 class SpaceOnlyPolicy(SelectionPolicy):
     """Onboard counts only; nothing is transmitted."""
 
+    @staticmethod
+    def _lane(processed, n):
+        """One lane's selection — the single body shared by the scalar
+        and lane-stacked entry points (no hand-synced duplicates)."""
+        return Selection(processed.copy(), np.zeros(0, np.int64),
+                         np.zeros(n, bool), 0.0)
+
     def select(self, ctx, budget_bytes):
-        return Selection(ctx.processed.copy(), np.zeros(0, np.int64),
-                         np.zeros(ctx.n, bool), 0.0)
+        return self._lane(ctx.processed, ctx.n)
+
+    def select_batch(self, batch, budgets):
+        """Native: the accept masks are rows of the stacked
+        ``processed`` plane."""
+        return SelectionBatch(
+            [self._lane(batch.processed[i, :n], n)
+             for i, n in enumerate(map(int, batch.n))],
+            np.zeros(batch.n_lanes, np.float64))
 
 
 @register_policy("ground_only")
@@ -126,13 +244,24 @@ class GroundOnlyPolicy(SelectionPolicy):
 
     wants_onboard = False
 
-    def select(self, ctx, budget_bytes):
-        k = int(budget_bytes // ctx.tile_bytes)
-        sel = np.arange(min(k, ctx.n))
-        credit = np.zeros(ctx.n, bool)
+    @staticmethod
+    def _lane(n, tile_bytes, budget_bytes):
+        """One lane's budget-bounded index-prefix fill (shared body)."""
+        k = int(budget_bytes // tile_bytes)
+        sel = np.arange(min(k, n))
+        credit = np.zeros(n, bool)
         credit[sel] = True
-        return Selection(np.zeros(ctx.n, bool), sel.astype(np.int64),
-                         credit, len(sel) * ctx.tile_bytes)
+        return Selection(np.zeros(n, bool), sel.astype(np.int64),
+                         credit, len(sel) * tile_bytes)
+
+    def select(self, ctx, budget_bytes):
+        return self._lane(ctx.n, ctx.tile_bytes, budget_bytes)
+
+    def select_batch(self, batch, budgets):
+        """Native: pure prefix fills over the stacked lane scalars."""
+        return SelectionBatch(
+            [self._lane(n, float(batch.tile_bytes[i]), float(budgets[i]))
+             for i, n in enumerate(map(int, batch.n))])
 
 
 @register_policy("tiansuan")
@@ -153,17 +282,34 @@ class TiansuanPolicy(SelectionPolicy):
     """
 
     def select(self, ctx, budget_bytes):
-        pcfg = ctx.pcfg
-        accept = ctx.processed & (ctx.conf > pcfg.tiansuan_thresh)
+        accept = ctx.processed & (ctx.conf > ctx.pcfg.tiansuan_thresh)
+        return self._finish(ctx, accept, budget_bytes)
+
+    @staticmethod
+    def _finish(ctx, accept, budget_bytes):
+        """Shared scalar/batched tail: the candidate queue, budget cut,
+        and credit masks of one lane (pure numpy, per-lane exact)."""
         cand = np.where(ctx.active & ~accept)[0]
         cand_reps = np.unique(ctx.rep_of[cand])
         k = int(budget_bytes // ctx.tile_bytes)
         sel_reps = cand_reps[:k]
         credit = np.isin(ctx.rep_of, sel_reps) & ~accept
-        if not pcfg.tiansuan_credit_unprocessed:
+        if not ctx.pcfg.tiansuan_credit_unprocessed:
             credit &= ctx.processed
         return Selection(accept, sel_reps.astype(np.int64), credit,
                          len(sel_reps) * ctx.tile_bytes)
+
+    def select_batch(self, batch, budgets):
+        """Native: the fixed-threshold accept masks for ALL lanes come
+        from one stacked compare (pad slots: ``processed`` False keeps
+        them out); the ragged candidate queues stay per-lane numpy."""
+        thresh = np.array([p.tiansuan_thresh for p in batch.pcfgs],
+                          np.float64)
+        accept2d = batch.processed & (batch.conf > thresh[:, None])
+        return SelectionBatch(
+            [self._finish(batch.lane(i), accept2d[i, :int(batch.n[i])],
+                          float(budgets[i]))
+             for i in range(batch.n_lanes)])
 
 
 class TwoThresholdPolicy(SelectionPolicy):
@@ -176,14 +322,21 @@ class TwoThresholdPolicy(SelectionPolicy):
     wants_dedup = True
     bandwidth_oblivious = False  # kodan: selects as if bandwidth were infinite
 
+    @staticmethod
+    def _reps(ctx) -> np.ndarray:
+        """Processed dedup representatives — the throttle's candidates."""
+        rep_self = ctx.rep_of == np.arange(ctx.n)
+        return np.where(ctx.processed & rep_self)[0]
+
+    def _budget(self, budget_bytes) -> np.float64:
+        return (np.float64(1e18) if self.bandwidth_oblivious
+                else np.float64(budget_bytes))
+
     def select(self, ctx, budget_bytes):
         pcfg = ctx.pcfg
-        n = ctx.n
-        rep_self = ctx.rep_of == np.arange(n)
-        rep_idx = np.where(ctx.processed & rep_self)[0]
+        rep_idx = self._reps(ctx)
         n_rep = len(rep_idx)
-        budget = (np.float64(1e18) if self.bandwidth_oblivious
-                  else np.float64(budget_bytes))
+        budget = self._budget(budget_bytes)
         if pcfg.use_engine:
             # shape-stable: pad the rep set to a bucket; pad slots are
             # inactive so they sort last and take no budget
@@ -197,6 +350,14 @@ class TwoThresholdPolicy(SelectionPolicy):
                           budget, pcfg.conf_p, pcfg.conf_q, pcfg.policy)
             space_m = np.asarray(tr.space)
             down_m = np.asarray(tr.downlink)
+        return self._finish(ctx, rep_idx, budget, space_m, down_m)
+
+    @staticmethod
+    def _finish(ctx, rep_idx, budget, space_m, down_m):
+        """Shared scalar/batched tail: leftover-bandwidth raw downlink of
+        unprocessed reps + rep-expanded space/ground masks of one lane."""
+        n = ctx.n
+        rep_self = ctx.rep_of == np.arange(n)
         down_reps = rep_idx[down_m]
 
         unproc_reps = np.where(ctx.active & rep_self & ~ctx.processed)[0]
@@ -213,6 +374,42 @@ class TwoThresholdPolicy(SelectionPolicy):
         use_space = rep_space[ctx.rep_of] & ctx.processed & ~use_ground
         return Selection(use_space, down_all, use_ground,
                          len(down_all) * ctx.tile_bytes)
+
+    def select_batch(self, batch, budgets):
+        """Native lane-stacked selection: every lane's candidate set
+        joins ONE vmapped padded-throttle program per fill order
+        (:func:`repro.core.throttle.throttle_padded_batch`) instead of L
+        jitted dispatches — the hot win of the batched planner. Per-lane
+        masks are bit-equal to the scalar bucketed call (padding
+        invariance + per-row vmap independence, differentially gated).
+        Reference-path lanes (``use_engine=False``) fall back to the
+        scalar adapter, whose eager unpadded throttle they are specified
+        against.
+        """
+        if not all(p.use_engine for p in batch.pcfgs):
+            return SelectionPolicy.select_batch(self, batch, budgets)
+        L = batch.n_lanes
+        ctxs = [batch.lane(i) for i in range(L)]
+        rep_idxs = [self._reps(c) for c in ctxs]
+        budget_eff = np.array([self._budget(float(budgets[i]))
+                               for i in range(L)], np.float64)
+        masks: list = [None] * L
+        by_fill: Dict[str, list] = {}
+        for i, c in enumerate(ctxs):
+            by_fill.setdefault(c.pcfg.policy, []).append(i)
+        for fill, ids in by_fill.items():
+            n_pad = dd.bucket_size(max(max(len(rep_idxs[i]) for i in ids), 1))
+            res = throttle_padded_batch(
+                [ctxs[i].conf[rep_idxs[i]] for i in ids],
+                [ctxs[i].tile_bytes for i in ids], budget_eff[ids],
+                [ctxs[i].pcfg.conf_p for i in ids],
+                [ctxs[i].pcfg.conf_q for i in ids],
+                fill, n_pad=n_pad, sharding=batch.sharding)
+            for i, m in zip(ids, res):
+                masks[i] = m
+        return SelectionBatch(
+            [self._finish(ctxs[i], rep_idxs[i], np.float64(budget_eff[i]),
+                          *masks[i]) for i in range(L)])
 
 
 @register_policy("targetfuse")

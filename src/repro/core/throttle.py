@@ -81,6 +81,78 @@ def throttle(conf: jnp.ndarray, sizes: jnp.ndarray, budget_bytes,
 _throttle_jit = jax.jit(throttle, static_argnames=("policy",))
 
 
+def _throttle_stack(conf, sizes, budgets, conf_p, conf_q, active, *,
+                    policy: str):
+    """:func:`throttle` vmapped over a leading lane axis — each lane is
+    one contact window's candidate set with its own budget/thresholds.
+    Lanes are independent (per-row sort/cumsum/masks), so per-lane
+    outputs are bit-equal to calling the scalar program lane by lane."""
+    return jax.vmap(
+        lambda c, s, b, p, q, a: throttle(c, s, b, p, q, policy, a)
+    )(conf, sizes, budgets, conf_p, conf_q, active)
+
+
+_throttle_stack_jit = jax.jit(_throttle_stack, static_argnames=("policy",))
+
+
+def throttle_padded_batch(conf, tile_bytes, budgets, conf_p, conf_q,
+                          policy: str = "dynamic_conf", n_pad: int = None,
+                          sharding=None):
+    """Lane-stacked :func:`throttle_padded`: L windows' candidate sets in
+    ONE compiled program instead of L dispatches.
+
+    ``conf``: list of L host (n_l,) confidence vectors (ragged);
+    ``tile_bytes`` / ``budgets`` / ``conf_p`` / ``conf_q``: (L,) per-lane
+    scalars (lists or arrays). All lanes are padded to ``n_pad`` slots
+    (default: the max lane length) with inactive entries — identical
+    padding-invariance as :func:`throttle_padded`, so per-lane masks are
+    bit-equal to the scalar bucketed call whatever each lane's own
+    bucket would have been. The LANE axis is bucketed too: the stack is
+    padded to a power-of-two lane count with inert lanes (all-inactive,
+    zero budget), so the compiled-program count stays log-bounded in
+    the windows-per-step instead of growing with every distinct lane
+    count a contact schedule produces. ``sharding``: optional
+    :class:`~repro.core.fleet_sharding.FleetSharding`; on-mesh the lane
+    stack is placed along the device mesh (lanes are independent, so
+    placement never changes a lane's masks).
+
+    Returns ``[(space, downlink), ...]`` host boolean mask pairs over
+    each lane's real ``n_l`` slots.
+    """
+    ns = [int(np.shape(c)[0]) for c in conf]
+    L = len(ns)
+    n_pad = max(ns + [1]) if n_pad is None else int(n_pad)
+    if n_pad < max(ns + [0]):
+        raise ValueError(
+            f"throttle_padded_batch: n_pad={n_pad} < max lane length "
+            f"{max(ns)} would drop real tiles")
+    L_pad = 1 << max(L - 1, 0).bit_length()  # pow2 lane bucket
+    conf_pad = np.full((L_pad, n_pad), -1.0)
+    act = np.zeros((L_pad, n_pad), bool)
+    for i, (c, n) in enumerate(zip(conf, ns)):
+        conf_pad[i, :n] = c
+        act[i, :n] = True
+
+    def lanes(v):  # (L,) per-lane scalars, zero-filled pad lanes
+        out = np.zeros(L_pad, np.float64)
+        out[:L] = np.asarray(v, np.float64)
+        return out
+
+    sizes = np.ascontiguousarray(
+        np.broadcast_to(lanes(tile_bytes)[:, None], (L_pad, n_pad)))
+    args = [jnp.asarray(conf_pad), jnp.asarray(sizes),
+            jnp.asarray(lanes(budgets)), jnp.asarray(lanes(conf_p)),
+            jnp.asarray(lanes(conf_q)), jnp.asarray(act)]
+    if sharding is not None and sharding.on_mesh:
+        # zero pad lanes (budget 0, all-inactive) are inert in their own
+        # rows; sliced off below before anything reads them
+        args = [sharding.shard(a) for a in args]
+    tr = _throttle_stack_jit(*args, policy=policy)
+    space = np.asarray(tr.space)[:L]
+    down = np.asarray(tr.downlink)[:L]
+    return [(space[i, :n], down[i, :n]) for i, n in enumerate(ns)]
+
+
 def throttle_padded(conf, tile_bytes: float, budget_bytes, conf_p: float,
                     conf_q: float, policy: str = "dynamic_conf",
                     n_pad: int = None):

@@ -99,6 +99,14 @@ class Round:
             out[p.sat] = p.harvest_j
         return out
 
+    def contact_plan(self, n_sats: int):
+        """This round's contact events as a declarative, validated
+        :class:`~repro.core.contact.ContactPlan` — the scenario
+        generator's schedule drives ``Fleet.contact_round(plan=...)``
+        directly (budgets/stations land in the plan's lane arrays)."""
+        from repro.core.contact import ContactPlan
+        return ContactPlan.from_contacts(self.contacts, n_sats)
+
 
 @dataclass
 class FleetScenario:

@@ -1,0 +1,374 @@
+"""ContactPlan / batched ground-segment tests.
+
+The acceptance gate of the contact-tier redesign: executing a round
+through the lane-stacked batched planner (``Fleet.contact_round``) is
+bit-equal — per-tile predictions, summaries, and every ledger lane — to
+draining each window through the scalar FIFO stage loop
+(``Fleet.contact_round_reference``) and to the sequential looped-Mission
+oracle, for all five policies on both the engine and reference execution
+paths. Plus: plan-build-time validation of malformed windows, the
+select_batch default adapter for third-party policies, the vmapped
+batched throttle's bit-parity, and the async (overlapped ground recount)
+path's equivalence to the synchronous fallback.
+"""
+import numpy as np
+import pytest
+
+from repro.core.contact import ContactPlan
+from repro.core.fleet import Fleet, run_scenario
+from repro.core.mission import Mission
+from repro.core.pipeline import PipelineConfig
+from repro.core.policies import (PolicyContextBatch, Selection,
+                                 SelectionPolicy, available_policies,
+                                 register_policy)
+from repro.core.throttle import throttle_padded, throttle_padded_batch
+from repro.data.scenarios import (FleetScenarioSpec, GroundStation,
+                                  generate_scenario)
+from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
+
+METHODS = ("space_only", "ground_only", "tiansuan", "kodan", "targetfuse")
+SCENE = SceneSpec("contact", 384, (10, 18), (10, 24), cloud_fraction=0.25)
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    """3 satellites x 3 rounds, two stations per round (so one satellite
+    gets two windows in some rounds and lanes stack per drain step)."""
+    return generate_scenario(FleetScenarioSpec(
+        n_sats=3, n_rounds=3, frames_per_pass=2,
+        stations=(GroundStation("gs0"),
+                  GroundStation("gs1", bandwidth_mbps=30.0, contact_s=240.0)),
+        scene_mix=(SCENE,), eclipse_fraction=0.35, seed=23))
+
+
+def _assert_same(a, b, ctx=""):
+    np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred,
+                                  err_msg=f"{ctx}: per-tile preds differ")
+    assert a.summary() == b.summary(), (
+        f"{ctx}: summaries differ:\n{a.summary()}\n{b.summary()}")
+
+
+def _assert_ledgers_equal(fa: Fleet, fb: Fleet, ctx=""):
+    for f in ("budget_j", "e_cap", "e_com", "e_agg", "e_down",
+              "bytes_budget", "bytes_requested", "bytes_spent"):
+        np.testing.assert_array_equal(
+            getattr(fa.ledger, f)[:fa.n_sats],
+            getattr(fb.ledger, f)[:fb.n_sats],
+            err_msg=f"{ctx}: ledger lane {f} differs")
+
+
+# ---------------------------------------------------------------------------
+# plan construction + validation (fail at build time, not in the drain)
+# ---------------------------------------------------------------------------
+
+def test_plan_builders_roundtrip():
+    plan = ContactPlan.build([(0, 1e6), (2, None), (1, 0.0)], n_sats=3)
+    assert plan.n_windows == 3 and plan.n_sats == 3
+    assert plan.window_budget(0) == 1e6
+    assert plan.window_budget(1) is None          # pending entitlement
+    assert plan.window_budget(2) == 0.0
+    assert list(plan.sats) == [0, 2, 1]
+    assert len(plan.stations) == 3
+
+    rot, ptr = ContactPlan.rotating(3, stations=4, start=2,
+                                    budget_bytes=5.0)
+    assert list(rot.sats) == [2, 0, 1, 2]         # wraps, never drops
+    assert ptr == 0
+    assert all(rot.window_budget(w) == 5.0 for w in range(4))
+    rot2, ptr2 = ContactPlan.rotating(3, stations=1, start=ptr)
+    assert list(rot2.sats) == [0] and ptr2 == 1
+    assert rot2.window_budget(0) is None
+
+    empty = ContactPlan.build([], n_sats=2)
+    assert empty.n_windows == 0
+
+
+def test_plan_from_scenario_contacts(scenario):
+    rnd = scenario.rounds[0]
+    plan = rnd.contact_plan(scenario.spec.n_sats)
+    assert plan.n_windows == len(rnd.contacts)
+    for w, c in enumerate(rnd.contacts):
+        assert int(plan.sats[w]) == c.sat
+        assert plan.window_budget(w) == c.budget_bytes
+        assert plan.stations[w] == c.station.name
+
+
+@pytest.mark.parametrize("windows,err", [
+    ([(3, 1e6)], "outside"),             # sat index >= n_sats
+    ([(-1, 1e6)], "outside"),            # negative sat index
+    ([(0, float("nan"))], "non-finite"),
+    ([(1, float("inf"))], "non-finite"),
+    ([(0, -5.0)], "negative"),
+])
+def test_plan_build_rejects_malformed_windows(windows, err):
+    with pytest.raises(ValueError, match=err):
+        ContactPlan.build(windows, n_sats=3)
+
+
+def test_contact_round_rejects_malformed_windows_at_build_time(counters):
+    """The Fleet entry point fails BEFORE any budget state mutates."""
+    space, ground = counters
+    fleet = Fleet(space, ground, PipelineConfig(method="space_only"),
+                  n_sats=2)
+    for bad in ([(2, 1e6)], [(0, -1.0)], [(1, float("nan"))]):
+        with pytest.raises(ValueError):
+            fleet.contact_round(windows=bad)
+    assert (fleet.ledger.bytes_budget == 0.0).all()
+    # and a plan built for a different fleet size is rejected
+    with pytest.raises(ValueError, match="fleet"):
+        fleet.contact_round(plan=ContactPlan.build([(0, 1.0)], n_sats=5))
+
+
+def test_plan_validates_array_construction():
+    with pytest.raises(ValueError, match="aligned"):
+        ContactPlan(sats=np.zeros(2, np.int64), budgets=np.zeros(3),
+                    entitlement=np.zeros(2, bool), stations=("a", "b"),
+                    n_sats=4)
+    with pytest.raises(ValueError, match="integers"):
+        ContactPlan(sats=np.zeros(2, np.float64), budgets=np.zeros(2),
+                    entitlement=np.zeros(2, bool), stations=("a", "b"),
+                    n_sats=4)
+    with pytest.raises(ValueError, match="station labels"):
+        ContactPlan(sats=np.zeros(2, np.int64), budgets=np.zeros(2),
+                    entitlement=np.zeros(2, bool), stations=("a",),
+                    n_sats=4)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance gate: batched planner == FIFO reference == oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_batched_plan_matches_fifo_reference(method, scenario, counters):
+    """Bit-equality (max deviation 0.0) of the lane-stacked batched
+    planner against the scalar FIFO window loop for every policy."""
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25)
+    got, fb = run_scenario(space, ground, pcfg, scenario, fleet=True)
+    want, fr = run_scenario(space, ground, pcfg, scenario, fleet=True,
+                            contact_reference=True)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"{method} sat{i} batched-vs-reference")
+    _assert_ledgers_equal(fb, fr, f"{method} batched-vs-reference")
+    # transitively: batched plan == sequential looped Missions
+    orc, _ = run_scenario(space, ground, pcfg, scenario, fleet=False)
+    for i, (a, b) in enumerate(zip(got, orc)):
+        _assert_same(a, b, f"{method} sat{i} batched-vs-oracle")
+
+
+def test_batched_plan_reference_path_satellites(scenario, counters):
+    """use_engine=False satellites fall back to the scalar window drain
+    inside the batched round — still exact."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25,
+                          use_engine=False)
+    got, _ = run_scenario(space, ground, pcfg, scenario, fleet=True)
+    want, _ = run_scenario(space, ground, pcfg, scenario, fleet=True,
+                           contact_reference=True)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"ref-path sat{i}")
+
+
+def test_batched_plan_heterogeneous_policy_mix(scenario, counters):
+    """Lanes of different policies in one round group per class and
+    stay satellite-wise exact."""
+    space, ground = counters
+    n = scenario.spec.n_sats
+    pcfgs = [PipelineConfig(method=METHODS[i % len(METHODS)],
+                            score_thresh=0.25) for i in range(n)]
+    got, fb = run_scenario(space, ground, pcfgs, scenario, fleet=True)
+    want, fr = run_scenario(space, ground, pcfgs, scenario, fleet=True,
+                            contact_reference=True)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"mixed sat{i} ({pcfgs[i].method})")
+    _assert_ledgers_equal(fb, fr, "mixed")
+
+
+def test_legacy_windows_and_rotation_apis_still_exact(counters):
+    """contact_round(windows=...) and the rotating default execute
+    through the plan core unchanged — reports and ledgers match the
+    scalar Mission drain."""
+    space, ground = counters
+    rng = np.random.default_rng(3)
+    img, b, c = make_scene(rng, SCENE)
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fleet = Fleet(space, ground, pcfg, n_sats=2)
+    frames = [revisit_frames(rng, img, b, c, 1) for _ in range(2)]
+    fleet.ingest(frames)
+    reps = fleet.contact_round(stations=3, budget_bytes=2e6)
+    assert [s for s, _ in reps] == [0, 1, 0]
+    missions = [Mission(space, ground, pcfg) for _ in range(2)]
+    for m, fr in zip(missions, frames):
+        m.ingest(fr)
+    want = [missions[0].contact_window(2e6), missions[1].contact_window(2e6),
+            missions[0].contact_window(2e6)]
+    for (sat, got_rep), want_rep in zip(reps, want):
+        assert got_rep == want_rep
+    for i, (a, b) in enumerate(zip(fleet.finalize(),
+                                   [m.finalize() for m in missions])):
+        _assert_same(a, b, f"legacy-api sat{i}")
+
+
+# ---------------------------------------------------------------------------
+# async overlap: deferred ground recount == synchronous fallback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ("targetfuse", "ground_only"))
+def test_async_ground_overlap_is_exact(method, scenario, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25)
+    got, fa = run_scenario(space, ground, pcfg, scenario, fleet=True,
+                           async_ground=True)
+    want, fs = run_scenario(space, ground, pcfg, scenario, fleet=True)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"async {method} sat{i}")
+    _assert_ledgers_equal(fa, fs, f"async {method}")
+    sa, ss = fa.summary(), fs.summary()
+    assert sa["async_ground"] is True and ss["async_ground"] is False
+    assert fa.ground_segment.rounds_deferred > 0
+    assert sa["recount_s"] > 0.0
+
+
+def test_async_results_wait_for_recount(counters):
+    """results() right after an async round returns completed
+    predictions (the implicit sync), not half-written segments."""
+    space, ground = counters
+    rng = np.random.default_rng(5)
+    img, b, c = make_scene(rng, SCENE)
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    fleet = Fleet(space, ground, pcfg, n_sats=1, async_ground=True)
+    sync = Fleet(space, ground, pcfg, n_sats=1)
+    frames = revisit_frames(rng, img, b, c, 2)
+    for fl in (fleet, sync):
+        fl.ingest([frames])
+        fl.contact_round(windows=[(0, 4e6)])
+    a = fleet.results()[0]   # syncs internally
+    b = sync.results()[0]
+    _assert_same(a, b, "async results")
+
+
+def test_async_worker_exception_surfaces_at_sync(counters):
+    space, ground = counters
+    rng = np.random.default_rng(6)
+    img, b, c = make_scene(rng, SCENE)
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    fleet = Fleet(space, ground, pcfg, n_sats=1, async_ground=True)
+    fleet.ingest([revisit_frames(rng, img, b, c, 1)])
+
+    def boom(*a, **k):
+        raise RuntimeError("recount exploded")
+
+    fleet.missions[0].contact_stages[3].run = boom  # Aggregate
+    fleet.contact_round(windows=[(0, 2e6)])
+    with pytest.raises(RuntimeError, match="recount exploded"):
+        fleet.ground_segment.sync()
+    # the error is consumed: the ground segment is usable again
+    fleet.ground_segment.sync()
+
+
+# ---------------------------------------------------------------------------
+# select_batch contract
+# ---------------------------------------------------------------------------
+
+@register_policy("_test_every_third")
+class _EveryThirdPolicy(SelectionPolicy):
+    """Scalar-only third-party policy: downlinks every third active
+    tile within budget. No select_batch override — exercises the
+    default adapter."""
+
+    wants_onboard = True
+
+    def select(self, ctx, budget_bytes):
+        cand = np.where(ctx.active)[0][::3]
+        k = int(budget_bytes // ctx.tile_bytes)
+        down = cand[:k].astype(np.int64)
+        credit = np.zeros(ctx.n, bool)
+        credit[down] = True
+        accept = ctx.processed & ~credit
+        return Selection(accept, down, credit,
+                         len(down) * ctx.tile_bytes)
+
+
+def test_select_batch_default_adapter_matches_scalar(scenario, counters):
+    """A plugin with only scalar select() runs unmodified under the
+    batched planner (the adapter drains lanes through it)."""
+    assert "_test_every_third" in available_policies()
+    space, ground = counters
+    pcfg = PipelineConfig(method="_test_every_third", score_thresh=0.25)
+    got, _ = run_scenario(space, ground, pcfg, scenario, fleet=True)
+    want, _ = run_scenario(space, ground, pcfg, scenario, fleet=True,
+                           contact_reference=True)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"adapter sat{i}")
+
+
+def test_policy_context_batch_lane_roundtrip():
+    """lane(i) recovers bit-equal scalar contexts from the stack,
+    whatever the lane lengths."""
+    from repro.core.policies import PolicyContext
+    rng = np.random.default_rng(0)
+    pcfg = PipelineConfig()
+    ctxs = []
+    for n in (5, 0, 9):
+        ctxs.append(PolicyContext(
+            n=n, active=rng.random(n) > 0.3,
+            rep_of=rng.integers(0, max(n, 1), n),
+            conf=rng.random(n), counts_sp=rng.random(n) * 4,
+            processed=rng.random(n) > 0.5, tile_bytes=519168.0, pcfg=pcfg))
+    batch = PolicyContextBatch.stack(ctxs, policies=[None] * 3)
+    assert batch.n_lanes == 3
+    for i, c in enumerate(ctxs):
+        lane = batch.lane(i)
+        assert lane.n == c.n and lane.tile_bytes == c.tile_bytes
+        for f in ("active", "rep_of", "conf", "counts_sp", "processed"):
+            np.testing.assert_array_equal(getattr(lane, f), getattr(c, f))
+    # pad slots are inert
+    assert not batch.active[1].any() and not batch.processed[1].any()
+    assert (batch.conf[0, 5:] == -1.0).all()
+    assert (batch.rep_of[0, 5:] == -1).all()
+
+
+def test_throttle_padded_batch_bit_equal_to_scalar():
+    """The vmapped lane-stacked throttle returns the exact masks of the
+    per-lane bucketed scalar call (documented tolerance 0.0), for every
+    fill-order policy, ragged lane lengths, and shared padding."""
+    rng = np.random.default_rng(7)
+    lanes = [rng.random(n) for n in (17, 1, 0, 64, 33)]
+    tile_bytes = [519168.0] * 5
+    budgets = np.array([3 * 519168.0, 0.0, 1e18, 40 * 519168.0, 5e5])
+    for policy in ("low_conf_first", "fixed_conf", "dynamic_conf"):
+        got = throttle_padded_batch(lanes, tile_bytes, budgets,
+                                    [0.10] * 5, [0.55] * 5, policy,
+                                    n_pad=64)
+        for (g_sp, g_dn), conf, budget in zip(got, lanes, budgets):
+            w_sp, w_dn = throttle_padded(conf, 519168.0,
+                                         np.float64(budget), 0.10, 0.55,
+                                         policy,
+                                         n_pad=max(len(conf), 1))
+            np.testing.assert_array_equal(g_sp, w_sp,
+                                          err_msg=f"{policy} space mask")
+            np.testing.assert_array_equal(g_dn, w_dn,
+                                          err_msg=f"{policy} downlink mask")
+    with pytest.raises(ValueError, match="n_pad"):
+        throttle_padded_batch(lanes, tile_bytes, budgets, [0.1] * 5,
+                              [0.5] * 5, n_pad=8)
+
+
+# ---------------------------------------------------------------------------
+# contact-tier summary fields
+# ---------------------------------------------------------------------------
+
+def test_summary_contact_throughput_fields(scenario, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    results, fleet = run_scenario(space, ground, pcfg, scenario, fleet=True)
+    s = fleet.summary()
+    n_windows = sum(len(r.contacts) for r in scenario.rounds)
+    assert s["windows_served"] >= n_windows  # + the finalize flush round
+    assert s["contact_s"] > 0.0
+    assert s["windows_per_s"] == pytest.approx(
+        s["windows_served"] / s["contact_s"])
+    assert s["bytes_downlinked_per_s"] == pytest.approx(
+        s["bytes_spent"] / s["contact_s"])
+    assert s["async_ground"] is False
+    assert s["recount_hidden_frac"] == 0.0

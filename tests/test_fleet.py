@@ -422,7 +422,9 @@ def test_fleet_sharded_uneven_lane_padding(counters):
     assert ss["n_devices"] == 4 and s1["n_devices"] == 1
     for s in (ss, s1):  # wall-clock/throughput legitimately differ
         for key in ("n_devices", "ingest_s", "tiles_per_s",
-                    "tiles_per_s_per_sat"):
+                    "tiles_per_s_per_sat", "contact_s", "windows_per_s",
+                    "bytes_downlinked_per_s", "recount_s", "recount_wait_s",
+                    "recount_hidden_frac"):
             s.pop(key)
     assert ss == s1
 

@@ -43,10 +43,7 @@ def _run_summary(method, counters):
     return m.finalize().summary()
 
 
-@pytest.mark.parametrize("method", METHODS)
-def test_golden_summary(method, counters, request):
-    path = os.path.join(GOLDEN_DIR, f"{method}.json")
-    got = _run_summary(method, counters)
+def _check_golden(got: dict, path: str, request, ctx: str):
     if request.config.getoption("--update-golden"):
         os.makedirs(GOLDEN_DIR, exist_ok=True)
         with open(path, "w") as f:
@@ -57,11 +54,63 @@ def test_golden_summary(method, counters, request):
                     f"--update-golden to create it")
     with open(path) as f:
         want = json.load(f)
-    assert set(got) == set(want), "summary keys drifted"
-    for k, w in want.items():
-        g = got[k]
-        if isinstance(w, int) and isinstance(g, int):
-            assert g == w, f"{method}.{k}: {g} != golden {w}"
-        else:
-            assert g == pytest.approx(w, rel=1e-12, abs=1e-12), (
-                f"{method}.{k}: {g} != golden {w}")
+    _compare(got, want, ctx)
+
+
+def _compare(got, want, ctx):
+    assert type(want) is type(got) or isinstance(got, type(want)), \
+        f"{ctx}: type drifted ({type(got)} vs {type(want)})"
+    if isinstance(want, dict):
+        assert set(got) == set(want), f"{ctx}: keys drifted"
+        for k in want:
+            _compare(got[k], want[k], f"{ctx}.{k}")
+    elif isinstance(want, list):
+        assert len(got) == len(want), f"{ctx}: length drifted"
+        for i, (g, w) in enumerate(zip(got, want)):
+            _compare(g, w, f"{ctx}[{i}]")
+    elif isinstance(want, bool) or isinstance(want, str):
+        assert got == want, f"{ctx}: {got} != golden {want}"
+    elif isinstance(want, int) and isinstance(got, int):
+        assert got == want, f"{ctx}: {got} != golden {want}"
+    else:
+        assert got == pytest.approx(want, rel=1e-12, abs=1e-12), (
+            f"{ctx}: {got} != golden {want}")
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_golden_summary(method, counters, request):
+    got = _run_summary(method, counters)
+    _check_golden(got, os.path.join(GOLDEN_DIR, f"{method}.json"),
+                  request, method)
+
+
+def test_golden_contact_plan_round(counters, request):
+    """Scenario-driven ContactPlan rounds through the batched
+    ground-segment core: per-satellite summaries plus the deterministic
+    fleet facts (windows served, byte/energy aggregates) of a fixed-seed
+    two-station constellation. Pins the whole contact tier — plan
+    construction from scenario events, lane-stacked selection, the
+    prefix drain, vectorized ledger charges, and the shared recount."""
+    from repro.core.fleet import run_scenario
+    from repro.data.scenarios import (FleetScenarioSpec, GroundStation,
+                                      generate_scenario)
+    space, ground = counters
+    sc = generate_scenario(FleetScenarioSpec(
+        n_sats=3, n_rounds=2, frames_per_pass=2,
+        stations=(GroundStation("gs0"),
+                  GroundStation("gs1", bandwidth_mbps=30.0, contact_s=240.0)),
+        eclipse_fraction=0.35, seed=21))
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25, seed=0)
+    results, fleet = run_scenario(space, ground, pcfg, sc, fleet=True)
+    s = fleet.summary()
+    got = {
+        "per_sat": [r.summary() for r in results],
+        "windows_served": s["windows_served"],
+        "bytes_spent": s["bytes_spent"],
+        "bytes_budget": s["bytes_budget"],
+        "energy_spent_j": s["energy_spent_j"],
+        "tiles_downlinked": s["tiles_downlinked"],
+        "total_pred": s["total_pred"],
+    }
+    _check_golden(got, os.path.join(GOLDEN_DIR, "contact_plan_fleet.json"),
+                  request, "contact_plan_fleet")

@@ -13,7 +13,12 @@ Invariants (paper §III-A-1 budget model):
     drained (idempotence);
   * splitting a frame batch across multiple ``ingest()`` calls conserves
     the aggregate tile/truth/frame counts of a single call, for every
-    registered policy.
+    registered policy;
+  * the batched ContactPlan executor preserves per-window byte caps and
+    FIFO-within-window prefix-drain semantics (each pending segment's
+    spend is exactly ``min(requested, budget - earlier spends)``), and
+    stays result-equal to the scalar FIFO reference under randomly
+    drawn window schedules.
 """
 import numpy as np
 import pytest
@@ -23,6 +28,7 @@ try:
 except ImportError:  # property tests skip; the rest of the suite runs
     from _hypothesis_fallback import given, settings, strategies as st
 
+from repro.core.fleet import Fleet
 from repro.core.mission import Mission
 from repro.core.pipeline import PipelineConfig
 from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
@@ -136,3 +142,90 @@ def test_split_ingest_conserves_aggregate_counts(method, seed, n_frames,
             == pytest.approx(rep_one.energy_granted_j, rel=1e-9))
     assert (rep_a.byte_entitlement + rep_b.byte_entitlement
             == pytest.approx(rep_one.byte_entitlement, rel=1e-9))
+
+
+# ---------------------------------------------------------------------------
+# batched ContactPlan executor properties
+# ---------------------------------------------------------------------------
+
+@given(method=st.sampled_from(METHODS), seed=st.integers(0, 2**20),
+       budgets=st.lists(st.floats(0.0, 3.0), min_size=1, max_size=3),
+       stations=st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_batched_plan_respects_window_byte_caps(method, seed, budgets,
+                                                stations, counters):
+    """Under the batched planner, every window report's spend respects
+    its offered budget and the fleet ledger never overdraws in
+    aggregate (budgets drawn in units of one full-scale tile; multiple
+    windows per round stack lanes)."""
+    space, ground = counters
+    fleet = Fleet(space, ground, _pcfg(method), n_sats=2)
+    tb = fleet.missions[0].tile_bytes
+    reports = []
+    for k, b in enumerate(budgets):
+        fleet.ingest([_frames(seed + k, 1), _frames(seed + 7 * k + 1, 1)])
+        reports += fleet.contact_round(stations=stations,
+                                       budget_bytes=b * tb)
+    for _, rep in reports:
+        assert rep.bytes_spent <= rep.budget_bytes + 1e-6
+    led = fleet.ledger
+    assert (led.bytes_spent <= led.bytes_budget + 1e-6).all()
+    assert float(led.bytes_spent.sum()) <= float(led.bytes_budget.sum()) + 1e-6
+
+
+@given(method=st.sampled_from(METHODS), seed=st.integers(0, 2**20),
+       n_passes=st.integers(2, 4), budget_tiles=st.floats(0.0, 6.0))
+@settings(max_examples=8, deadline=None)
+def test_batched_plan_fifo_prefix_drain(method, seed, n_passes,
+                                        budget_tiles, counters):
+    """FIFO-within-window: one window draining several pending segments
+    gives each segment EXACTLY ``min(requested, budget - earlier
+    spends)`` — the prefix-sum drain the batched executor implements
+    step-wise (float-exact, not approximate)."""
+    space, ground = counters
+    fleet = Fleet(space, ground, _pcfg(method), n_sats=1)
+    for k in range(n_passes):
+        fleet.ingest([_frames(seed + k, 1)])
+    budget = budget_tiles * fleet.missions[0].tile_bytes
+    [(_, rep)] = fleet.contact_round(windows=[(0, budget)])
+    segs = fleet.missions[0]._segments
+    assert rep.segments == n_passes == len(segs)
+    remaining = float(budget)
+    for s in segs:
+        assert s.bytes_spent == min(s.bytes_requested, remaining)
+        remaining -= s.bytes_spent
+    assert remaining >= -1e-9
+    assert rep.bytes_spent == pytest.approx(
+        sum(s.bytes_spent for s in segs))
+
+
+@given(method=st.sampled_from(METHODS), seed=st.integers(0, 2**20),
+       budgets=st.lists(st.floats(0.0, 4.0), min_size=1, max_size=2),
+       stations=st.integers(1, 3))
+@settings(max_examples=6, deadline=None)
+def test_batched_plan_matches_reference_property(method, seed, budgets,
+                                                 stations, counters):
+    """Generative differential gate: random window schedules through the
+    batched planner and the scalar FIFO reference produce identical
+    per-tile predictions, summaries, and ledger lanes."""
+    space, ground = counters
+
+    def run(reference):
+        fleet = Fleet(space, ground, _pcfg(method), n_sats=2)
+        rnd = (fleet.contact_round_reference if reference
+               else fleet.contact_round)
+        tb = fleet.missions[0].tile_bytes
+        for k, b in enumerate(budgets):
+            fleet.ingest([_frames(seed + k, 1), _frames(seed + 5 * k + 3, 1)])
+            rnd(stations=stations, budget_bytes=b * tb)
+        return fleet.finalize(), fleet
+
+    got, fb = run(reference=False)
+    want, fr = run(reference=True)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred)
+        assert a.summary() == b.summary()
+    for f in ("budget_j", "e_down", "bytes_budget", "bytes_requested",
+              "bytes_spent"):
+        np.testing.assert_array_equal(getattr(fb.ledger, f),
+                                      getattr(fr.ledger, f))
