@@ -31,7 +31,8 @@ batched ground recount deferred to a worker thread that overlaps the
 next round's ingest). Timed via the fleets' cumulative ``contact_s``
 (best of interleaved iterations after a warm pass of every arm), so the
 speedup is contact-tier-only and steady-state. Gates (full-size sweep
-only; parity always): batched >= 1.5x the looped reference; the async
+only, and ratio gates only on >= ``PERF_GATES_MIN_CORES``-core boxes;
+parity always): batched >= 1.5x the looped reference; the async
 arm hides >= 50% of recount wall time behind foreground work
 (``recount_hidden_frac`` = 1 - sync-wait / recount); and all three
 arms' per-tile predictions/summaries agree at 0.0 deviation.
@@ -51,6 +52,24 @@ turns a violation into a nonzero exit). On forced host devices the
 demonstrates structure (real gains need real accelerators); the
 recorded numbers are honest either way.
 
+**Faults sweep** — the robustness tier: one scenario
+(``FLEET_BENCH_FAULT_SATS``, default 8 satellites) executed under
+deterministic fault injection at increasing fault rates
+(``FLEET_BENCH_FAULT_RATES``, default 0/5/10/25% applied to window
+drops and segment corruption, plus pinned corruption of round 0's
+windows so corruption provably fires — and is provably re-served by
+the rotation — at every nonzero rate), on the dense multi-window
+scenario, recording detection error and contact throughput per rate. Three gates ride along: (1) the **disabled-path
+overhead** of the fault subsystem — ``FaultPlan.none()`` vs
+``faults=None`` — stays < 2% (full-size sweep only, and only when the
+box's same-arm timing noise floor can resolve 2%; the parity of the
+two arms is asserted always); (2) the **retry arm** (bounded
+retry-with-backoff) recovers at least the no-retry arm's ground-kept
+downlinked bytes at EVERY rate (identical fault draws via
+``FaultPlan.with_retries``); (3) the **async watchdog arm** — an
+injected ground-worker crash recovered by the watchdog — matches the
+synchronous arm bit-exactly.
+
 Writes ``BENCH_fleet.json``.
 """
 from __future__ import annotations
@@ -64,11 +83,28 @@ import time
 JSON_PATH = "BENCH_fleet.json"
 DEFAULT_SATS = (2, 8, 32)
 DEFAULT_DEVICES = (1, 2, 4)
+DEFAULT_FAULT_RATES = (0.0, 0.05, 0.10, 0.25)
 SHARD_PARITY_TOL = 0.0  # documented dedup tolerance: bit-equal on CPU
 SPEEDUP_GATE = 1.25     # fleet vs loop at 8 sats (see module docstring)
 CONTACT_PARITY_TOL = 0.0   # batched planner vs FIFO reference: bit-equal
 CONTACT_SPEEDUP_GATE = 1.5  # batched vs looped contact tier, 32x8 sweep
 ASYNC_HIDE_GATE = 0.5      # recount wall time hidden behind ingest
+FAULT_OVERHEAD_GATE = 0.02  # FaultPlan.none() vs faults=None wall overhead
+# The perf-RATIO gates (fleet speedup @8 sats, contact speedup, async
+# hidden fraction, fault-off overhead) were calibrated on a multi-core
+# runner: the batched/async arms win precisely by exploiting intra-op
+# parallelism, so on a 1-core box the ratios are structurally different
+# (and wall-clock noise can't resolve a 2% overhead bound at all). On
+# such boxes every number is still measured and recorded — only the
+# ratio-gate ENFORCEMENT is skipped (gate value null in the JSON, with
+# cpu_cores/perf_gates_enforced recording why). Parity/robustness gates
+# (0.0 deviation, retry recovery, watchdog bit-exactness) are machine-
+# independent and always enforced.
+PERF_GATES_MIN_CORES = 2
+
+
+def _perf_gates_enforced() -> bool:
+    return (os.cpu_count() or 1) >= PERF_GATES_MIN_CORES
 
 
 def _ints_from_env(name, default):
@@ -185,6 +221,150 @@ def _stations_sweep(rows, report):
                  f"speedup={speedup:.2f}x hidden={hidden:.2f} "
                  f"wps={sb['windows_per_s']:.1f} dev={max_dev:.1e}"))
     return row
+
+
+def _floats_from_env(name, default):
+    env = os.environ.get(name, "")
+    if not env:
+        return default
+    return tuple(float(x) for x in env.replace(",", " ").split())
+
+
+def _faults_sweep(rows, report):
+    """Fault-injection sweep + the robustness gates (module docstring).
+    Returns the summary dict (None when disabled)."""
+    import numpy as np
+
+    from benchmarks.common import counters
+    from repro.core.faults import FaultPlan
+    from repro.core.fleet import run_scenario
+    from repro.core.pipeline import PipelineConfig
+    from repro.data.scenarios import generate_scenario
+
+    rates = _floats_from_env("FLEET_BENCH_FAULT_RATES", DEFAULT_FAULT_RATES)
+    n_sats = int(os.environ.get("FLEET_BENCH_FAULT_SATS", "8"))
+    if not rates or n_sats <= 0:
+        return None
+    n_rounds, iters, _ = _bench_knobs()
+    space, ground = counters()
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    # the DENSE scenario (4 windows/round), not the 2-station one: retry
+    # re-delivery needs a satellite to be served AGAIN after its failed
+    # transmission — with one window per sat per scenario the retry and
+    # no-retry arms are indistinguishable (recovery would only happen at
+    # the zero-byte finalize flush, which transmits nothing)
+    n_stations = min(4, max(1, n_sats // 2))
+    sc = generate_scenario(_contact_spec(n_sats, n_stations, seed=8))
+    full_size = n_sats >= 8
+
+    def arm(**kw):
+        return run_scenario(space, ground, pcfg, sc, fleet=True, **kw)
+
+    # -- disabled-path overhead: FaultPlan.none() vs faults=None ----------
+    # a 2% bound needs a stabler estimator than best-of-``iters``: run
+    # more interleaved reps, take best-of each arm, and derive a noise
+    # floor from the SAME-arm spread (best vs second-best of the off
+    # arm) — when one arm against itself varies by more than the gate,
+    # the box cannot resolve the bound and enforcement is skipped
+    reps = max(iters, 5)
+    res_off, _ = arm()                              # untimed warm runs
+    res_none, _ = arm(faults=FaultPlan.none())
+    for a, b in zip(res_off, res_none):  # parity always, 0.0 deviation
+        np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred)
+        assert a.summary() == b.summary(), \
+            "FaultPlan.none() arm diverged from faults=None"
+    ts_off, ts_none = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        arm()
+        t1 = time.perf_counter()
+        arm(faults=FaultPlan.none())
+        ts_off.append(t1 - t0)
+        ts_none.append(time.perf_counter() - t1)
+    t_off, t_none = min(ts_off), min(ts_none)
+    overhead = t_none / t_off - 1.0
+    noise_floor = sorted(ts_off)[1] / t_off - 1.0
+    overhead_resolvable = noise_floor < FAULT_OVERHEAD_GATE
+
+    # -- fault-rate sweep: retry vs no-retry arms over identical draws ----
+    # every nonzero-rate plan also PINS corruption at pos 0 of round 0's
+    # windows: rate-drawn sites can land on lanes that never transmit
+    # (energy-starved sats, empty selections), and a corruption that
+    # never fires would make the retry-vs-no-retry comparison vacuous.
+    # Round 0 specifically, so the rotation re-serves the failed
+    # satellite within the scenario and the retry arm's re-transmission
+    # actually lands (not just the zero-byte finalize flush)
+    pinned = frozenset((0, w, 0) for w in range(n_stations))
+    per_rate = []
+    for rate in rates:
+        fp = FaultPlan(seed=17, drop_rate=rate, corrupt_rate=rate,
+                       segment_corruptions=pinned if rate else frozenset(),
+                       max_retries=2)
+        res_r, fl_r = arm(faults=fp)
+        res_n, fl_n = arm(faults=fp.with_retries(0))
+        sr, sn = fl_r.summary(), fl_n.summary()
+
+        def _err(res):
+            pred = sum(r.total_pred for r in res)
+            true = sum(r.total_true for r in res)
+            return abs(pred - true) / max(true, 1.0)
+
+        row = {
+            "rate": rate,
+            "detection_rel_err": _err(res_r),
+            "detection_rel_err_no_retry": _err(res_n),
+            "windows_per_s": sr["windows_per_s"],
+            "windows_dropped": sr["fault_windows_dropped"],
+            "segments_corrupted": sr["fault_segments_corrupted"],
+            "segments_lost": sr["fault_segments_lost"],
+            "bytes_delivered": sr["fault_bytes_delivered"],
+            "bytes_delivered_no_retry": sn["fault_bytes_delivered"],
+            "retry_recovers": (sr["fault_bytes_delivered"]
+                               >= sn["fault_bytes_delivered"]),
+        }
+        per_rate.append(row)
+        report[f"faults_rate_{int(rate * 100)}pct"] = row
+        rows.append((f"faults_rate_{int(rate * 100)}pct",
+                     sr["contact_s"] * 1e6,
+                     f"err={row['detection_rel_err']:.3f} "
+                     f"wps={row['windows_per_s']:.1f} "
+                     f"lost={row['segments_lost']} "
+                     f"recovered={row['retry_recovers']}"))
+
+    # -- async watchdog arm: injected worker crash, bit-exact recovery ----
+    fp_crash = FaultPlan(seed=17, drop_rate=0.1, corrupt_rate=0.1,
+                         worker_faults={0: "crash"})
+    res_w, fl_w = arm(faults=fp_crash, async_ground=True, watchdog_s=10.0)
+    res_s, _ = arm(faults=fp_crash)
+    watchdog_dev = 0.0
+    for a, b in zip(res_w, res_s):
+        if a.per_tile_pred.size:
+            watchdog_dev = max(watchdog_dev, float(np.max(np.abs(
+                a.per_tile_pred - b.per_tile_pred))))
+        assert a.summary() == b.summary(), \
+            "watchdog arm summary diverged from the synchronous arm"
+    sw = fl_w.summary()
+
+    out = {
+        "n_sats": n_sats, "rounds": n_rounds, "rates": list(rates),
+        "none_plan_overhead": overhead,
+        "overhead_noise_floor": noise_floor,
+        "overhead_resolvable": overhead_resolvable,
+        "no_faults_s": t_off, "none_plan_s": t_none,
+        "retry_recovers_all_rates": all(r["retry_recovers"]
+                                        for r in per_rate),
+        "watchdog_pred_max_dev": watchdog_dev,
+        "watchdog_recoveries": sw["fault_watchdog_recoveries"],
+        "worker_crashes": sw["fault_worker_crashes"],
+        "full_size": full_size,
+    }
+    report["faults"] = out
+    rows.append(("faults_summary", t_none * 1e6,
+                 f"overhead={overhead:+.3f} "
+                 f"noise={noise_floor:+.3f} "
+                 f"recovers={out['retry_recovers_all_rates']} "
+                 f"watchdog_dev={watchdog_dev:.1e}"))
+    return out
 
 
 def _best(fn, iters):
@@ -367,13 +547,18 @@ def run(json_path: str = None):
     rows, report = [], {}
     _size_sweep(rows, report)
     contact = _stations_sweep(rows, report)
+    faults = _faults_sweep(rows, report)
     shard_dev = _devices_sweep(rows, report)
 
+    perf_on = _perf_gates_enforced()
     report["_summary"] = {
+        "cpu_cores": os.cpu_count(),
+        "perf_gates_enforced": perf_on,
         "speedup_at_8_sats": report.get("sats_8", {}).get("speedup"),
         "speedup_gate": SPEEDUP_GATE,
         "gate_speedup_at_8_sats": (report["sats_8"]["speedup"] >= SPEEDUP_GATE
-                                   if "sats_8" in report else None),
+                                   if "sats_8" in report and perf_on
+                                   else None),
         "max_pred_dev": max(r["pred_max_dev"] for k, r in report.items()
                             if k.startswith("sats_")),
         "sharded_pred_max_dev": shard_dev,
@@ -382,7 +567,7 @@ def run(json_path: str = None):
         "contact_speedup_gate": CONTACT_SPEEDUP_GATE,
         "gate_contact_speedup": (
             contact["speedup"] >= CONTACT_SPEEDUP_GATE
-            if contact and contact["full_size"] else None),
+            if contact and contact["full_size"] and perf_on else None),
         "contact_pred_max_dev": (contact["pred_max_dev"]
                                  if contact else None),
         "contact_parity_tol": CONTACT_PARITY_TOL,
@@ -391,7 +576,18 @@ def run(json_path: str = None):
         "async_hide_gate": ASYNC_HIDE_GATE,
         "gate_async_hidden": (
             contact["async_recount_hidden_frac"] >= ASYNC_HIDE_GATE
-            if contact and contact["full_size"] else None),
+            if contact and contact["full_size"] and perf_on else None),
+        "fault_none_plan_overhead": (faults["none_plan_overhead"]
+                                     if faults else None),
+        "fault_overhead_gate": FAULT_OVERHEAD_GATE,
+        "gate_fault_overhead": (
+            faults["none_plan_overhead"] < FAULT_OVERHEAD_GATE
+            if faults and faults["full_size"] and perf_on
+            and faults["overhead_resolvable"] else None),
+        "gate_fault_retry_recovers": (faults["retry_recovers_all_rates"]
+                                      if faults else None),
+        "fault_watchdog_pred_max_dev": (faults["watchdog_pred_max_dev"]
+                                        if faults else None),
     }
     rows.append(("fleet_summary", 0.0,
                  f"speedup@8={report['_summary']['speedup_at_8_sats']} "
@@ -403,8 +599,9 @@ def run(json_path: str = None):
         json.dump(report, f, indent=2)
     # fail loudly AFTER the report lands on disk (run.py --strict turns
     # any gate into a nonzero exit); smoke configs without an 8-sat row
-    # or a full-size contact sweep skip the perf gates by design —
-    # parity gates always apply
+    # or a full-size contact sweep skip the perf gates by design, and so
+    # do sub-``PERF_GATES_MIN_CORES`` boxes (gate value null, see the
+    # constant's comment) — parity/robustness gates always apply
     if shard_dev is not None and shard_dev > SHARD_PARITY_TOL:
         raise AssertionError(
             f"sharded parity gate: pred_max_dev={shard_dev:.3e} exceeds "
@@ -430,6 +627,22 @@ def run(json_path: str = None):
             f"async overlap gate: hidden fraction "
             f"{contact['async_recount_hidden_frac']:.2f} < "
             f"{ASYNC_HIDE_GATE} of recount wall time (see {json_path})")
+    if faults:
+        if faults["watchdog_pred_max_dev"] > 0.0:
+            raise AssertionError(
+                f"watchdog parity gate: async crash-recovery arm deviates "
+                f"{faults['watchdog_pred_max_dev']:.3e} from the "
+                f"synchronous arm (see {json_path})")
+        if not faults["retry_recovers_all_rates"]:
+            raise AssertionError(
+                f"retry gate: the bounded-retry arm delivered fewer "
+                f"ground-kept bytes than the no-retry arm at some fault "
+                f"rate (see {json_path})")
+        if report["_summary"]["gate_fault_overhead"] is False:
+            raise AssertionError(
+                f"fault-subsystem overhead gate: FaultPlan.none() costs "
+                f"{faults['none_plan_overhead']:+.1%} vs faults=None "
+                f"(>= {FAULT_OVERHEAD_GATE:.0%}, see {json_path})")
     return rows
 
 

@@ -21,6 +21,14 @@ device mesh (on CPU, force host devices first:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) — with
 ``--check`` that asserts the sharded fleet against the sequential
 oracle.
+
+``--faults SEED`` turns on deterministic fault injection
+(:mod:`repro.core.faults`): dropped windows, station outages,
+mid-window truncations, corrupted downlink segments with bounded
+retry, and satellite blackouts, all drawn from the seed (rates via
+``--drop-rate`` etc.). With ``--check``, the faulty batched fleet is
+asserted bit-equal to the faulty scalar FIFO reference instead of the
+oracle, and the run's ledgers are asserted non-negative.
 """
 import argparse
 import os
@@ -55,7 +63,19 @@ def main():
     ap.add_argument("--async-ground", action="store_true",
                     help="overlap each round's batched ground recount "
                          "with the next round's ingest (exact either way)")
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED",
+                    help="inject a deterministic fault schedule drawn "
+                         "from this seed (drops, outages, truncations, "
+                         "corruption+retry, blackouts)")
+    ap.add_argument("--drop-rate", type=float, default=0.15)
+    ap.add_argument("--truncate-rate", type=float, default=0.15)
+    ap.add_argument("--corrupt-rate", type=float, default=0.25)
+    ap.add_argument("--blackout-rate", type=float, default=0.1)
+    ap.add_argument("--outage-rate", type=float, default=0.25)
+    ap.add_argument("--max-retries", type=int, default=2)
     args = ap.parse_args()
+    if args.faults is not None and args.oracle:
+        ap.error("--faults needs the fleet executors (drop --oracle)")
 
     mesh = sats_mesh(args.devices)  # None for --devices 1
     space, ground = get_counters()
@@ -68,6 +88,14 @@ def main():
     scenario = generate_scenario(spec)
     pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25,
                           bandwidth_mbps=args.bandwidth)
+    faults = None
+    if args.faults is not None:
+        faults = spec.fault_plan(
+            args.faults, drop_rate=args.drop_rate,
+            truncate_rate=args.truncate_rate,
+            corrupt_rate=args.corrupt_rate,
+            blackout_rate=args.blackout_rate,
+            outage_rate=args.outage_rate, max_retries=args.max_retries)
 
     path = ("oracle (looped Missions)" if args.oracle else
             f"fleet ({args.devices} device(s))")
@@ -83,16 +111,25 @@ def main():
 
     results, driver = run_scenario(space, ground, pcfg, scenario,
                                    fleet=not args.oracle, mesh=mesh,
-                                   async_ground=args.async_ground)
+                                   async_ground=args.async_ground,
+                                   faults=faults)
     if args.check:
-        other, _ = run_scenario(space, ground, pcfg, scenario,
-                                fleet=args.oracle)
+        if faults is not None:
+            # segment-granular faults need the Fleet executors: gate the
+            # faulty batched planner against the scalar FIFO reference
+            other, _ = run_scenario(space, ground, pcfg, scenario,
+                                    faults=faults, contact_reference=True)
+            what_ref = "scalar FIFO reference (faulty)"
+        else:
+            other, _ = run_scenario(space, ground, pcfg, scenario,
+                                    fleet=args.oracle)
+            what_ref = "looped Missions"
         for i, (a, b) in enumerate(zip(results, other)):
             np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred)
             assert a.summary() == b.summary(), f"sat{i} summary mismatch"
         what = (f"sharded fleet ({args.devices} devices)"
                 if mesh is not None else "fleet")
-        print(f"parity check: {what} == looped Missions (exact)")
+        print(f"parity check: {what} == {what_ref} (exact)")
 
     for s, r in enumerate(results):
         print(f"  sat{s}: CMAE={r.cmae:.3f} "
@@ -122,6 +159,23 @@ def main():
         led = fleet.ledger
         assert (led.e_com <= led.budget_j + 1e-9).all(), \
             "onboard compute overdraw"
+        if faults is not None:
+            # degraded-mode invariants: reconciliation never leaves a
+            # lane negative or double-credits a refund
+            for f in ("budget_j", "e_down", "bytes_budget", "bytes_spent"):
+                assert (getattr(led, f) >= 0.0).all(), \
+                    f"ledger lane {f} went negative under faults"
+            assert s["fault_bytes_refunded"] <= s["fault_bytes_wasted"], \
+                "refunded more than was wasted"
+            print(f"faults (seed {args.faults}): "
+                  f"{s['fault_windows_dropped']} windows dropped "
+                  f"({s['fault_budget_folded'] / 1e6:.2f} MB folded fwd), "
+                  f"{s['fault_windows_truncated']} truncated, "
+                  f"{s['fault_segments_corrupted']} segments corrupted "
+                  f"({s['fault_segments_requeued']} retried, "
+                  f"{s['fault_segments_lost']} lost), "
+                  f"{s['fault_blackout_passes']} blackout passes; "
+                  f"{s['fault_bytes_refunded'] / 1e6:.2f} MB refunded")
         print(f"fleet runtime: {s['n_devices']} device(s), "
               f"dedup_batched={s['dedup_batched']}, "
               f"ingest {s['tiles_per_s']:.0f} tiles/s "

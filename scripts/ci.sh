@@ -9,8 +9,17 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# dev deps are best-effort: property tests use the real hypothesis when
+# this succeeds and the deterministic tests/_hypothesis_fallback.py mini
+# runner when it doesn't (air-gapped images) — they RUN either way
+pip install -r requirements-dev.txt 2>/dev/null || \
+  echo "(offline: property tests run on the fallback mini runner)"
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
+
+echo "== property tests (hypothesis or the fallback runner) =="
+python -m pytest -x -q tests/test_invariants.py
 
 echo "== kernel bench smoke =="
 python -m benchmarks.run kernels --strict --json BENCH_kernels_smoke.json
@@ -25,6 +34,11 @@ echo "   scenario-driven ContactPlans + overlapped ground recount) =="
 timeout 600 python examples/constellation_sim.py --sats 2 --rounds 2 --check \
   --async-ground
 
+echo "== example smoke: faulty constellation (seeded fault injection,"
+echo "   batched-vs-FIFO-reference parity under faults) =="
+timeout 600 python examples/constellation_sim.py --sats 2 --rounds 3 \
+  --faults 17 --check
+
 echo "== example smoke: collaborative serving on the ContactPlan stream =="
 timeout 600 python examples/serve_collaborative.py --passes 2 --overlap
 
@@ -37,10 +51,12 @@ XLA_FLAGS="--xla_force_host_platform_device_count=2" \
   timeout 600 python examples/constellation_sim.py --sats 3 --rounds 2 \
   --devices 2 --check
 
-echo "== fleet bench smoke (tiny config, incl. sharded-path parity gate"
-echo "   and the contact-plan batched/reference/async parity gate) =="
+echo "== fleet bench smoke (tiny config, incl. sharded-path parity gate,"
+echo "   the contact-plan batched/reference/async parity gate, and the"
+echo "   fault-sweep retry/watchdog parity gates) =="
 FLEET_BENCH_SATS=2 FLEET_BENCH_ROUNDS=1 FLEET_BENCH_ITERS=1 \
   FLEET_BENCH_DEVICES=1,2 FLEET_BENCH_SHARD_SATS=3 \
   FLEET_BENCH_STATIONS=2 FLEET_BENCH_CONTACT_SATS=3 \
+  FLEET_BENCH_FAULT_SATS=2 FLEET_BENCH_FAULT_RATES=0,0.25 \
   FLEET_BENCH_JSON=BENCH_fleet_smoke.json \
   timeout 900 python -m benchmarks.run fleet --strict

@@ -59,8 +59,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cascade import count_tiles_multi
+from repro.core.faults import FaultContext, WorkerCrash
 from repro.core.mission import WindowReport, policy_context
 from repro.core.policies import PolicyContextBatch
+from repro.core.throttle import clamp_budget_bytes
 
 __all__ = ["ContactPlan", "GroundSegment", "execute_plan",
            "execute_plan_reference"]
@@ -194,9 +196,17 @@ class ContactPlan:
 # the batched executor core
 # ---------------------------------------------------------------------------
 
-def _select_downlink(fleet, plan: ContactPlan):
+def _select_downlink(fleet, plan: ContactPlan,
+                     ctx: Optional[FaultContext] = None):
     """The synchronous half of a batched round: open every window, then
     drain Select + Downlink step-wise across lanes.
+
+    ``ctx`` (a faulty round) adds the segment-granular fault hooks:
+    mid-window truncation zeroes a window's remaining budget at its
+    drawn drain step, and corrupted transmissions are detected (and
+    refunded/re-queued) immediately after each step's Downlink charges —
+    so every ledger lane sees the exact charge/refund float sequence of
+    the scalar fault drain (:func:`_contact_window_faulty`).
 
     Returns ``(out, jobs)`` — the per-window ``(sat, WindowReport)``
     list (complete: reports never depend on the recount) and the jobs
@@ -211,7 +221,12 @@ def _select_downlink(fleet, plan: ContactPlan):
         if not fleet._contact_batchable[sat]:
             # custom stage graphs / reference-path satellites take the
             # exact scalar window drain, in plan order
-            out[w] = (sat, m.contact_window(plan.window_budget(w)))
+            if ctx is None:
+                out[w] = (sat, m.contact_window(plan.window_budget(w)))
+            else:
+                out[w] = (sat, _contact_window_faulty(
+                    m, plan.window_budget(w), ctx,
+                    int(ctx.orig_windows[w])))
             continue
         if m._window_is_noop():
             out[w] = (sat, m._drained_window_report())
@@ -223,10 +238,34 @@ def _select_downlink(fleet, plan: ContactPlan):
     if open_sats:
         fleet.ledger.accrue_window_budgets(open_sats, open_budgets)
 
+    truncs: Dict[int, int] = {}  # job index -> drain step the link dies at
+    if ctx is not None:
+        for j, (slot, _, _, _, segs) in enumerate(jobs):
+            t = ctx.faults.truncated_at(ctx.rnd, int(ctx.orig_windows[slot]),
+                                        len(segs))
+            if t is not None and 0 <= t < len(segs):
+                truncs[j] = t
+                ctx.stats.windows_truncated += 1
+
     depth = max((len(segs) for *_, segs in jobs), default=0)
     for p in range(depth):
-        lanes = [(sat, m, window, segs[p])
-                 for _, sat, m, window, segs in jobs if len(segs) > p]
+        for j, t in truncs.items():
+            if t == p:  # the link died here: later segments see 0 budget
+                jobs[j][3].remaining = 0.0
+        if ctx is None:
+            served = None
+            lanes = [(sat, m, window, segs[p])
+                     for _, sat, m, window, segs in jobs if len(segs) > p]
+        else:
+            served = [jb for jb in jobs if len(jb[4]) > p]
+            lanes = [(sat, m, window, segs[p])
+                     for _, sat, m, window, segs in served]
+        for _, _, _, seg in lanes:
+            # this attempt starts clean — also on clean rounds, which may
+            # re-drain a segment a FAULTY round re-queued (the finalize
+            # flush): stale flags would skip its recount/aggregate
+            seg.requeued = False
+            seg.corrupted = False
         # --- Select: one select_batch per policy class; each lane's
         # budget is its window's remaining prefix ---
         by_cls: Dict[type, list] = {}
@@ -248,7 +287,7 @@ def _select_downlink(fleet, plan: ContactPlan):
         for sat, m, window, seg in lanes:
             sel = seg.selection
             spend = min(sel.bytes_requested, window.remaining)
-            window.remaining -= spend
+            window.remaining = clamp_budget_bytes(window.remaining - spend)
             seg.bytes_requested = sel.bytes_requested
             seg.bytes_spent = spend
             sats_v.append(sat)
@@ -256,10 +295,50 @@ def _select_downlink(fleet, plan: ContactPlan):
             spends.append(spend)
             bws.append(m.pcfg.bandwidth_mbps)
         fleet.ledger.charge_downlink_windows(sats_v, reqs, spends, bws)
+        if ctx is not None:
+            _apply_corruption(fleet, ctx, served, p)
 
     for slot, sat, m, window, segs in jobs:
         out[slot] = (sat, m._window_report(window, segs))
     return out, jobs
+
+
+def _apply_corruption(fleet, ctx: FaultContext, served, p: int) -> None:
+    """Detect (deterministically) which of drain step ``p``'s
+    transmissions the ground discards, reconcile the ledger per the
+    refund policy, and route each failed segment to retry or permanent
+    loss. Refunds land as ONE vectorized inverse-charge op immediately
+    after the step's charges, so each lane's float sequence is exactly
+    the scalar drain's charge-then-refund pair."""
+    r_sats, r_spends, r_bws = [], [], []
+    for slot, sat, m, window, segs in served:
+        seg = segs[p]
+        ow = int(ctx.orig_windows[slot])
+        if len(seg.selection.downlink) and \
+                ctx.faults.segment_corrupted(ctx.rnd, ow, p):
+            seg.corrupted = True
+            ctx.stats.segments_corrupted += 1
+            ctx.events.append((ow, p, "wasted", seg.bytes_spent))
+            if ctx.faults.refund_policy == "refund" and seg.bytes_spent > 0.0:
+                r_sats.append(sat)
+                r_spends.append(seg.bytes_spent)
+                r_bws.append(m.pcfg.bandwidth_mbps)
+                ctx.events.append((ow, p, "refunded", seg.bytes_spent))
+            if seg.retries < ctx.faults.max_retries:
+                seg.retries += 1
+                seg.eligible_round = ctx.rnd + seg.retries  # linear backoff
+                seg.requeued = True
+                ctx.requeue.append((m, seg))
+                ctx.stats.segments_requeued += 1
+            else:
+                # permanently lost downlink-side: onboard-accepted counts
+                # still land at Aggregate; ground-credited tiles read 0
+                seg.counts_gd = np.zeros(seg.n)
+                ctx.stats.segments_lost += 1
+        elif seg.bytes_spent > 0.0:
+            ctx.events.append((ow, p, "delivered", seg.bytes_spent))
+    if r_sats:
+        fleet.ledger.refund_downlink_windows(r_sats, r_spends, r_bws)
 
 
 def _recount_aggregate(fleet, jobs) -> None:
@@ -271,6 +350,11 @@ def _recount_aggregate(fleet, jobs) -> None:
     by_thresh: Dict[float, list] = {}
     for _, _, m, _, segs in jobs:
         for seg in segs:
+            if seg.corrupted:
+                # the ground discarded this attempt's bytes: nothing to
+                # recount (a retry re-transmits; a lost segment already
+                # holds zero ground counts)
+                continue
             by_thresh.setdefault(m.pcfg.score_thresh, []).append((m, seg))
     params, cfg = fleet.ground
     for thresh, items in by_thresh.items():
@@ -285,33 +369,99 @@ def _recount_aggregate(fleet, jobs) -> None:
             seg.counts_gd = counts_gd[seg.rep_of]
     for _, _, m, window, segs in jobs:
         for seg in segs:
+            if seg.requeued:
+                continue  # retrying in a later round: no prediction yet
             m.contact_stages[3].run(m, seg, window)  # Aggregate
 
 
-def execute_plan(fleet, plan: ContactPlan,
-                 recount_inline: bool = True):
+def _contact_window_faulty(m, budget_bytes, ctx: FaultContext,
+                           orig_w: int) -> WindowReport:
+    """``Mission.contact_window`` with the segment-granular fault hooks
+    of one window: the scalar FIFO reference of the fault-aware batched
+    drain (and the non-batchable-satellite path of a faulty round).
+    Same stage sequence, same ledger arithmetic, same deterministic
+    fault draws — differentially gated bit-equal to the batched path by
+    tests/test_faults.py."""
+    if m._window_is_noop():
+        return m._drained_window_report()
+    segs, window = m._open_window(budget_bytes)
+    faults = ctx.faults
+    t = faults.truncated_at(ctx.rnd, orig_w, len(segs))
+    if t is not None and 0 <= t < len(segs):
+        ctx.stats.windows_truncated += 1
+    else:
+        t = None
+    select, downlink, recount, aggregate = m.contact_stages
+    for p, seg in enumerate(segs):
+        if t == p:
+            window.remaining = 0.0
+        seg.requeued = False
+        seg.corrupted = False
+        select.run(m, seg, window)
+        downlink.run(m, seg, window)
+        if len(seg.selection.downlink) and \
+                faults.segment_corrupted(ctx.rnd, orig_w, p):
+            seg.corrupted = True
+            ctx.stats.segments_corrupted += 1
+            ctx.events.append((orig_w, p, "wasted", seg.bytes_spent))
+            if faults.refund_policy == "refund" and seg.bytes_spent > 0.0:
+                m.bytes_ledger.spent -= seg.bytes_spent
+                m.ledger.refund_downlink(seg.bytes_spent,
+                                         m.pcfg.bandwidth_mbps)
+                ctx.events.append((orig_w, p, "refunded", seg.bytes_spent))
+            if seg.retries < faults.max_retries:
+                seg.retries += 1
+                seg.eligible_round = ctx.rnd + seg.retries  # linear backoff
+                seg.requeued = True
+                ctx.requeue.append((m, seg))
+                ctx.stats.segments_requeued += 1
+            else:
+                seg.counts_gd = np.zeros(seg.n)
+                ctx.stats.segments_lost += 1
+                aggregate.run(m, seg, window)
+        else:
+            if seg.bytes_spent > 0.0:
+                ctx.events.append((orig_w, p, "delivered", seg.bytes_spent))
+            recount.run(m, seg, window)
+            aggregate.run(m, seg, window)
+    return m._window_report(window, segs)
+
+
+def execute_plan(fleet, plan: ContactPlan, recount_inline: bool = True,
+                 fault_ctx: Optional[FaultContext] = None):
     """Run one ContactPlan through the batched core. With
     ``recount_inline=False`` the recount jobs are returned instead of
-    executed (the :class:`GroundSegment` overlap path).
+    executed (the :class:`GroundSegment` overlap path). ``fault_ctx``
+    makes it a faulty round (see :mod:`repro.core.faults`).
 
     Returns ``(out, jobs)``.
     """
-    out, jobs = _select_downlink(fleet, plan)
+    out, jobs = _select_downlink(fleet, plan, fault_ctx)
     if recount_inline and jobs:
         _recount_aggregate(fleet, jobs)
         jobs = []
     return out, jobs
 
 
-def execute_plan_reference(fleet, plan: ContactPlan):
+def execute_plan_reference(fleet, plan: ContactPlan,
+                           fault_ctx: Optional[FaultContext] = None):
     """The FIFO-loop reference: every window drains sequentially
     through the scalar Mission stage loop (Select -> Downlink ->
     GroundRecount -> Aggregate per segment) — the pre-plan contact tier,
     kept as the parity oracle and the bench baseline the batched
-    executor is gated against (max deviation 0.0)."""
+    executor is gated against (max deviation 0.0). A faulty round
+    (``fault_ctx``) swaps each window's drain for the fault-aware scalar
+    loop, which stays the bit-exact oracle of the fault-aware batched
+    path."""
+    if fault_ctx is None:
+        return [(int(plan.sats[w]),
+                 fleet.missions[int(plan.sats[w])].contact_window(
+                     plan.window_budget(w)))
+                for w in range(plan.n_windows)]
     return [(int(plan.sats[w]),
-             fleet.missions[int(plan.sats[w])].contact_window(
-                 plan.window_budget(w)))
+             _contact_window_faulty(
+                 fleet.missions[int(plan.sats[w])], plan.window_budget(w),
+                 fault_ctx, int(fault_ctx.orig_windows[w])))
             for w in range(plan.n_windows)]
 
 
@@ -333,6 +483,22 @@ class GroundSegment:
     while a recount is in flight. ``overlap=False`` recounts inline —
     the synchronous fallback, bit-identical output either way.
 
+    **Watchdog** (``watchdog_s``): :meth:`sync` joins with that timeout;
+    a worker still alive past it is cancelled (a cooperative event — the
+    daemon thread is abandoned if truly hung) and the round's recount
+    re-runs synchronously. Recounts charge NOTHING and only overwrite
+    per-segment outputs, so the retry is idempotent and the watchdog arm
+    stays bit-equal to a synchronous round even if the stalled worker
+    later limps home. An injected :class:`~repro.core.faults.WorkerCrash`
+    recovers the same way; any real worker exception surfaces exactly
+    once at :meth:`sync`, with every ledger lane intact.
+
+    **Lifecycle**: GroundSegment is a context manager. A clean ``with``
+    exit syncs (surfacing errors normally); an exceptional exit calls
+    :meth:`close`, which cancels and joins the worker WITHOUT raising —
+    so an exception between :meth:`execute` and :meth:`sync` can never
+    leak a live thread or orphan pending recount jobs.
+
     Wall-time accounting for the bench/summary: ``recount_s`` is the
     cumulative recount time (worker wall when overlapped, inline wall
     when not), ``wait_s`` the time :meth:`sync` actually blocked.
@@ -340,49 +506,130 @@ class GroundSegment:
     the overlap hid behind foreground work.
     """
 
-    def __init__(self, fleet, overlap: bool = False):
+    def __init__(self, fleet, overlap: bool = False,
+                 watchdog_s: Optional[float] = None):
         self.fleet = fleet
         self.overlap = bool(overlap)
+        self.watchdog_s = watchdog_s
         self._thread: Optional[threading.Thread] = None
         self._err: Optional[BaseException] = None
+        self._jobs = None
+        self._cancel: Optional[threading.Event] = None
         self.recount_s = 0.0
         self.wait_s = 0.0
         self.rounds_deferred = 0
 
-    def execute(self, plan: ContactPlan):
+    def execute(self, plan: ContactPlan,
+                fault_ctx: Optional[FaultContext] = None):
         self.sync()
         out, jobs = execute_plan(self.fleet, plan,
-                                 recount_inline=not self.overlap)
+                                 recount_inline=not self.overlap,
+                                 fault_ctx=fault_ctx)
         if jobs:  # overlap path: defer the recount
             self.rounds_deferred += 1
+            self._jobs = jobs
+            self._cancel = threading.Event()
+            worker_fault = fault_ctx.worker if fault_ctx is not None else None
+            stall_s = (fault_ctx.faults.stall_s if fault_ctx is not None
+                       else 0.0)
             self._thread = threading.Thread(
-                target=self._recount_job, args=(jobs,), daemon=True)
+                target=self._recount_job,
+                args=(jobs, worker_fault, stall_s, self._cancel), daemon=True)
             self._thread.start()
         return out
 
-    def execute_reference(self, plan: ContactPlan):
+    def execute_reference(self, plan: ContactPlan,
+                          fault_ctx: Optional[FaultContext] = None):
         self.sync()
-        return execute_plan_reference(self.fleet, plan)
+        return execute_plan_reference(self.fleet, plan, fault_ctx=fault_ctx)
 
-    def _recount_job(self, jobs):
+    def _fault_stats(self):
+        return getattr(self.fleet, "fault_stats", None)
+
+    def _recount_job(self, jobs, worker_fault, stall_s, cancel):
         t0 = time.perf_counter()
         try:
+            if worker_fault == "crash":
+                stats = self._fault_stats()
+                if stats is not None:
+                    stats.worker_crashes += 1
+                raise WorkerCrash("injected ground-worker crash")
+            if worker_fault == "stall":
+                stats = self._fault_stats()
+                if stats is not None:
+                    stats.worker_stalls += 1
+                time.sleep(stall_s)
+                if cancel.is_set():
+                    return  # the watchdog took the round over; write nothing
             _recount_aggregate(self.fleet, jobs)
-        except BaseException as e:  # surfaced at the next sync()
+        except BaseException as e:  # surfaced (or recovered) at sync()
             self._err = e
         finally:
             self.recount_s += time.perf_counter() - t0
 
     def sync(self) -> None:
-        """Join any in-flight recount; re-raise its exception here."""
-        if self._thread is not None:
+        """Join any in-flight recount (bounded by the watchdog timeout
+        when one is set); recover injected crashes/stalls by recounting
+        synchronously, re-raise real worker exceptions exactly once."""
+        t, self._thread = self._thread, None
+        jobs, self._jobs = self._jobs, None
+        cancel, self._cancel = self._cancel, None
+        if t is not None:
             t0 = time.perf_counter()
-            self._thread.join()
+            t.join(self.watchdog_s)
             self.wait_s += time.perf_counter() - t0
-            self._thread = None
-        if self._err is not None:
-            err, self._err = self._err, None
-            raise err
+            if t.is_alive():
+                # watchdog timeout: cancel the worker (abandoned if truly
+                # hung — it is a daemon and a late recount is idempotent)
+                # and take the round over synchronously
+                cancel.set()
+                self._err = None
+                self._recover(jobs)
+                return
+        err, self._err = self._err, None
+        if err is not None:
+            if isinstance(err, WorkerCrash):
+                self._recover(jobs)  # injected crash: recoverable
+            else:
+                # real failure: surfaced exactly once; recounts charge
+                # nothing, so every ledger lane is intact
+                raise err
+
+    def _recover(self, jobs) -> None:
+        """Synchronous recount retry of an abandoned round (idempotent:
+        recounts are pure writes of per-segment outputs)."""
+        stats = self._fault_stats()
+        if stats is not None:
+            stats.watchdog_recoveries += 1
+        if jobs:
+            t0 = time.perf_counter()
+            _recount_aggregate(self.fleet, jobs)
+            self.recount_s += time.perf_counter() - t0
+
+    def close(self) -> None:
+        """Release the worker without surfacing results or errors:
+        cancel any in-flight recount, join briefly (the daemon thread is
+        abandoned if truly hung), and drop pending jobs and stored
+        exceptions. Idempotent; never raises — the teardown path for
+        exceptional exits, so no live thread outlives the fleet."""
+        t, self._thread = self._thread, None
+        cancel, self._cancel = self._cancel, None
+        self._jobs = None
+        self._err = None
+        if cancel is not None:
+            cancel.set()
+        if t is not None and t.is_alive():
+            t.join(self.watchdog_s if self.watchdog_s is not None else 5.0)
+
+    def __enter__(self) -> "GroundSegment":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.sync()
+        else:
+            self.close()
+        return False
 
     @property
     def hidden_fraction(self) -> float:

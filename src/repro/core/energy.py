@@ -74,6 +74,15 @@ class EnergyLedger:
         seconds = n_bytes * 8.0 / (bandwidth_mbps * 1e6)
         self.e_down += seconds * RADIO_POWER_W
 
+    def refund_downlink(self, n_bytes: float, bandwidth_mbps: float):
+        """Reverse a downlink radio charge (fault reconciliation: a
+        corrupted transmission under the ``refund`` policy). Computes the
+        EXACT joule value :meth:`charge_downlink` added and subtracts it,
+        so a charge/refund pair can never drive ``e_down`` negative
+        (``fl(fl(a+x)-x) >= 0`` for ``a, x >= 0``)."""
+        seconds = n_bytes * 8.0 / (bandwidth_mbps * 1e6)
+        self.e_down -= seconds * RADIO_POWER_W
+
 
 @dataclass
 class ByteLedger:
@@ -146,6 +155,10 @@ class SatEnergyView:
     def charge_downlink(self, n_bytes: float, bandwidth_mbps: float):
         seconds = n_bytes * 8.0 / (bandwidth_mbps * 1e6)
         self._ledger.e_down[self._sat] += seconds * RADIO_POWER_W
+
+    def refund_downlink(self, n_bytes: float, bandwidth_mbps: float):
+        seconds = n_bytes * 8.0 / (bandwidth_mbps * 1e6)
+        self._ledger.e_down[self._sat] -= seconds * RADIO_POWER_W
 
 
 class SatBytesView:
@@ -254,6 +267,23 @@ class FleetLedger:
         seconds = spends * 8.0 / (np.asarray(bandwidth_mbps, np.float64)
                                   * 1e6)
         np.add.at(self.e_down, sats, seconds * RADIO_POWER_W)
+
+    def refund_downlink_windows(self, sats, spends, bandwidth_mbps):
+        """Reverse one drain step's Downlink charges for the lanes whose
+        transmission the ground discarded (fault reconciliation under the
+        ``refund`` policy) — byte spend and radio energy. Subtracts the
+        EXACT per-lane float64 values :meth:`charge_downlink_windows`
+        added (same ``seconds * RADIO_POWER_W`` arithmetic, negated,
+        ``np.add.at`` in lane order), so lanes can never go negative and
+        a refund is bit-equal to the scalar
+        :meth:`EnergyLedger.refund_downlink` sequence. Requested bytes
+        are NOT refunded: the policy did ask for the transmission."""
+        sats = np.asarray(sats, np.int64)
+        spends = np.asarray(spends, np.float64)
+        np.add.at(self.bytes_spent, sats, -spends)
+        seconds = spends * 8.0 / (np.asarray(bandwidth_mbps, np.float64)
+                                  * 1e6)
+        np.add.at(self.e_down, sats, -(seconds * RADIO_POWER_W))
 
     # -- per-satellite Mission-compatible views -----------------------------
 

@@ -83,6 +83,7 @@ from repro.core.cascade import count_tiles_multi
 from repro.core.contact import ContactPlan, GroundSegment
 from repro.core.energy import (FleetLedger, max_tiles_within_budget,
                                max_tiles_within_budget_vec)
+from repro.core.faults import FaultContext, FaultPlan, FaultStats
 from repro.core.fleet_sharding import FleetSharding
 from repro.core.mission import (Aggregate, Capture, Dedup, Downlink,
                                 GroundRecount, IngestReport, Mission,
@@ -124,11 +125,26 @@ class Fleet:
     contact_reference : ``True`` pins EVERY contact round (including the
         ``finalize`` flush) to the scalar FIFO-loop reference path —
         the parity oracle / bench baseline of the batched planner.
+    faults : optional :class:`~repro.core.faults.FaultPlan` — a seeded,
+        fully deterministic fault schedule injected at the contact/ingest
+        tiers (window drops, truncation, corrupted downlinks with
+        retry-with-backoff, blackout passes, station outages, worker
+        crash/stall; see :mod:`repro.core.faults`). ``None`` (default)
+        and ``FaultPlan.none()`` are bit-equal to the fault-free runtime
+        on every path. Blackouts key on the ingest-call counter; contact
+        faults on the contact-round counter (the ``finalize`` flush is
+        never faulted, so everything not permanently lost drains).
+    watchdog_s : optional ground-worker watchdog timeout (seconds) for
+        ``async_ground=True``: a recount worker that hasn't finished
+        within it is cancelled and the round recounted synchronously
+        (bit-equal — recounts are idempotent and charge nothing).
     """
 
     def __init__(self, space, ground, pcfg=None, n_sats: Optional[int] = None,
                  energy_cfgs=None, mesh=None, strict_parity: bool = False,
-                 async_ground: bool = False, contact_reference: bool = False):
+                 async_ground: bool = False, contact_reference: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 watchdog_s: Optional[float] = None):
         if isinstance(pcfg, (list, tuple)):
             pcfgs = list(pcfg)
             if n_sats is not None and n_sats != len(pcfgs):
@@ -162,12 +178,21 @@ class Fleet:
         self._batchable = [self._can_batch(m) for m in self.missions]
         self._contact_batchable = [self._can_batch_contact(m)
                                    for m in self.missions]
-        self.ground_segment = GroundSegment(self, overlap=async_ground)
+        self.ground_segment = GroundSegment(self, overlap=async_ground,
+                                            watchdog_s=watchdog_s)
         self.contact_reference = bool(contact_reference)
         self._ingest_s = 0.0       # cumulative ingest wall time
         self._tiles_ingested = 0   # for summary() throughput
         self._contact_s = 0.0      # cumulative contact-round wall time
         self._windows_served = 0   # across all contact rounds
+        # fault subsystem: the empty-plan check happens ONCE here so the
+        # disabled path costs a single cached-bool test per round
+        self.faults = faults
+        self.fault_stats = FaultStats()
+        self._faults_active = faults is not None and not faults.empty
+        self._ingest_round = 0     # blackout draws key on this counter
+        self._fault_round = 0      # contact-tier draws key on this one
+        self._suppress_faults = False  # the finalize flush is never faulted
 
     @staticmethod
     def _can_batch(m: Mission) -> bool:
@@ -206,10 +231,23 @@ class Fleet:
                 f"got {len(energy_budgets_j)}")
         reports: List[Optional[IngestReport]] = [None] * self.n_sats
 
+        blackouts = frozenset()
+        if self._faults_active:
+            blackouts = frozenset(
+                i for i in range(self.n_sats)
+                if self.faults.blackout(self._ingest_round, i))
+            self.fault_stats.blackout_passes += len(blackouts)
         batched = [i for i in range(self.n_sats)
-                   if self._batchable[i] and frames_per_sat[i]]
+                   if self._batchable[i] and frames_per_sat[i]
+                   and i not in blackouts]
         for i in range(self.n_sats):
-            if i not in batched:
+            if i in blackouts:
+                # satellite brownout: the pass is skipped entirely (zero
+                # harvest, no segment, no capture charge)
+                reports[i] = self.missions[i].ingest(
+                    frames_per_sat[i], energy_budget_j=energy_budgets_j[i],
+                    blackout=True)
+            elif i not in batched:
                 # empty passes and non-default graphs take the exact
                 # sequential Mission path
                 reports[i] = self.missions[i].ingest(
@@ -217,6 +255,7 @@ class Fleet:
         if batched:
             self._ingest_batched(batched, frames_per_sat, energy_budgets_j,
                                  reports)
+        self._ingest_round += 1
         self._ingest_s += time.perf_counter() - t0
         self._tiles_ingested += sum(r.n_tiles for r in reports
                                     if r is not None)
@@ -407,6 +446,65 @@ class Fleet:
             budget_bytes=budget_bytes)
         return plan
 
+    # -- fault-round lifecycle ---------------------------------------------
+
+    def _begin_fault_round(self, plan: ContactPlan):
+        """Open one faulty contact round: repair the plan (drop dead
+        windows, fold their budgets forward), park re-queued segments
+        whose retry backoff hasn't elapsed, and build the
+        :class:`~repro.core.faults.FaultContext` both executors consume.
+        Returns ``(plan, None)`` untouched when faults are off (a single
+        cached-bool test — the <2% disabled-path overhead gate)."""
+        if not self._faults_active or self._suppress_faults:
+            return plan, None
+        rnd = self._fault_round
+        repaired = self.faults.repair(plan, rnd, self.fault_stats)
+        ctx = FaultContext(
+            faults=self.faults, rnd=rnd,
+            orig_windows=repaired.orig_windows, stats=self.fault_stats,
+            worker=(self.faults.worker_fault(rnd)
+                    if self.ground_segment.overlap else None))
+        for m in self.missions:
+            if not m._pending:
+                continue
+            hold = [s for s in m._pending
+                    if s.requeued and s.eligible_round > rnd]
+            if hold:
+                m._pending = [s for s in m._pending if not
+                              (s.requeued and s.eligible_round > rnd)]
+                ctx.held.append((m, hold))
+        return repaired.plan, ctx
+
+    def _end_fault_round(self, ctx: Optional[FaultContext]) -> None:
+        """Close a faulty round: re-queue held + newly-failed segments at
+        the FRONT of their mission's pending FIFO (they are the oldest
+        data, ordered by ingest), and fold the round's byte-flow events
+        into the fault counters in canonical ``(window, pos)`` order so
+        summaries are executor-order independent. Runs in a ``finally``:
+        a mid-round exception can never strand a parked segment, so
+        ``finalize()`` stays safe afterwards."""
+        if ctx is None:
+            return
+        per_m: Dict[int, Tuple[Mission, list]] = {}
+        for m, hold in ctx.held:
+            per_m.setdefault(id(m), (m, []))[1].extend(hold)
+        for m, seg in ctx.requeue:
+            per_m.setdefault(id(m), (m, []))[1].append(seg)
+        for m, group in per_m.values():
+            order = {id(s): k for k, s in enumerate(m._segments)}
+            group.sort(key=lambda s: order[id(s)])
+            m._pending[:0] = group
+        stats = self.fault_stats
+        for _, _, kind, amt in sorted(ctx.events,
+                                      key=lambda e: (e[0], e[1], e[2])):
+            if kind == "delivered":
+                stats.bytes_delivered += amt
+            elif kind == "refunded":
+                stats.bytes_refunded += amt
+            elif kind == "wasted":
+                stats.bytes_wasted += amt
+        self._fault_round += 1
+
     def contact_round(self, windows: Optional[Sequence[Tuple[int, float]]]
                       = None, stations: int = 1,
                       budget_bytes: Optional[float] = None, *,
@@ -438,8 +536,12 @@ class Fleet:
             return self.contact_round_reference(
                 windows, stations, budget_bytes, plan=plan)
         plan = self._resolve_plan(windows, stations, budget_bytes, plan)
+        plan, ctx = self._begin_fault_round(plan)
         t0 = time.perf_counter()
-        out = self.ground_segment.execute(plan)
+        try:
+            out = self.ground_segment.execute(plan, fault_ctx=ctx)
+        finally:
+            self._end_fault_round(ctx)
         self._contact_s += time.perf_counter() - t0
         self._windows_served += plan.n_windows
         return out
@@ -454,8 +556,12 @@ class Fleet:
         stage loop. The parity oracle (and bench baseline) the batched
         planner is gated against at 0.0 deviation."""
         plan = self._resolve_plan(windows, stations, budget_bytes, plan)
+        plan, ctx = self._begin_fault_round(plan)
         t0 = time.perf_counter()
-        out = self.ground_segment.execute_reference(plan)
+        try:
+            out = self.ground_segment.execute_reference(plan, fault_ctx=ctx)
+        finally:
+            self._end_fault_round(ctx)
         self._contact_s += time.perf_counter() - t0
         self._windows_served += plan.n_windows
         return out
@@ -463,13 +569,37 @@ class Fleet:
     def finalize(self) -> List[PipelineResult]:
         """Flush every satellite's pending passes through zero-byte
         windows (onboard results land, nothing transmits) in one batched
-        contact round, then aggregate per satellite."""
+        contact round, then aggregate per satellite.
+
+        The flush is NEVER faulted: re-queued segments still waiting out
+        their retry backoff (and everything else pending) drain here, so
+        only permanently-lost transmissions end without ground credit."""
         pend = [i for i in range(self.n_sats) if self.missions[i]._pending]
         if pend:
-            self.contact_round(windows=[(i, 0.0) for i in pend])
+            self._suppress_faults = True
+            try:
+                self.contact_round(windows=[(i, 0.0) for i in pend])
+            finally:
+                self._suppress_faults = False
         for m in self.missions:
             m._finalized = True
         return self.results()
+
+    def close(self) -> None:
+        """Tear down without surfacing deferred-recount results or
+        errors (delegates to :meth:`GroundSegment.close`): idempotent,
+        never raises, never leaks a worker thread."""
+        self.ground_segment.close()
+
+    def __enter__(self) -> "Fleet":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.ground_segment.sync()
+        else:
+            self.close()
+        return False
 
     def results(self) -> List[PipelineResult]:
         self.ground_segment.sync()  # deferred recounts land before reads
@@ -522,12 +652,16 @@ class Fleet:
             "bytes_budget": float(self.ledger.bytes_budget[:self.n_sats].sum()),
             "energy_spent_j": float(self.ledger.spent[:self.n_sats].sum()),
             "energy_budget_j": float(self.ledger.budget_j[:self.n_sats].sum()),
+            "faults_active": self._faults_active,
+            **self.fault_stats.as_dict(),
         }
 
 
 def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
                  energy_cfgs=None, mesh=None, strict_parity: bool = False,
-                 async_ground: bool = False, contact_reference: bool = False):
+                 async_ground: bool = False, contact_reference: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 watchdog_s: Optional[float] = None):
     """Execute a :class:`~repro.data.scenarios.FleetScenario`.
 
     ``fleet=True`` runs the constellation-batched :class:`Fleet` path
@@ -541,18 +675,37 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
     sequential ``Mission`` per satellite fed the identical event order.
     Returns ``(per_sat_results, driver)`` where ``driver`` is the Fleet
     or the Mission list.
+
+    ``faults`` injects a deterministic fault schedule
+    (:mod:`repro.core.faults`). The Fleet path supports every fault
+    class; the looped-Mission oracle supports the plan/ingest-tier
+    classes (blackouts, window drops, station outages) with identical
+    draws — segment-granular faults (truncation, corruption/retry,
+    worker crash/stall) need the Fleet executors and raise here on the
+    oracle path.
     """
     n = scenario.spec.n_sats
+    faults_active = faults is not None and not faults.empty
     if fleet:
         fl = Fleet(space, ground, pcfg, n_sats=n, energy_cfgs=energy_cfgs,
                    mesh=mesh, strict_parity=strict_parity,
                    async_ground=async_ground,
-                   contact_reference=contact_reference)
+                   contact_reference=contact_reference, faults=faults,
+                   watchdog_s=watchdog_s)
         for rnd in scenario.rounds:
             fl.ingest(rnd.frames_per_sat(n), rnd.harvest_per_sat(n))
             if rnd.contacts:
                 fl.contact_round(plan=rnd.contact_plan(n))
         return fl.finalize(), fl
+    if faults_active and (
+            faults.truncate_rate or faults.corrupt_rate
+            or faults.worker_crash_rate or faults.worker_stall_rate
+            or faults.window_truncations or faults.segment_corruptions
+            or faults.worker_faults):
+        raise ValueError(
+            "the looped-Mission oracle supports blackout/window-drop/"
+            "station-outage faults only; segment-granular fault classes "
+            "need the Fleet path (fleet=True)")
     pcfgs = (list(pcfg) if isinstance(pcfg, (list, tuple))
              else [pcfg] * n)
     if len(pcfgs) != n:
@@ -560,11 +713,23 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
                          f"{n}-satellite scenario")
     missions = [Mission(space, ground, p, energy_cfgs=energy_cfgs)
                 for p in pcfgs]
-    for rnd in scenario.rounds:
+    contact_idx = 0  # mirrors Fleet._fault_round (rounds with contacts)
+    for r_i, rnd in enumerate(scenario.rounds):
         frames = rnd.frames_per_sat(n)
         harvest = rnd.harvest_per_sat(n)
         for i in range(n):
-            missions[i].ingest(frames[i], energy_budget_j=harvest[i])
-        for c in rnd.contacts:
-            missions[c.sat].contact_window(c.budget_bytes)
+            missions[i].ingest(
+                frames[i], energy_budget_j=harvest[i],
+                blackout=faults_active and faults.blackout(r_i, i))
+        if not rnd.contacts:
+            continue
+        if faults_active:
+            rp = faults.repair(rnd.contact_plan(n), contact_idx)
+            for w in range(rp.plan.n_windows):
+                missions[int(rp.plan.sats[w])].contact_window(
+                    rp.plan.window_budget(w))
+            contact_idx += 1
+        else:
+            for c in rnd.contacts:
+                missions[c.sat].contact_window(c.budget_bytes)
     return [m.finalize() for m in missions], missions

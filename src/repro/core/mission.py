@@ -48,6 +48,7 @@ from repro.core.energy import (ByteLedger, EnergyLedger, detector_gflops,
 from repro.core.metrics import cmae
 from repro.core.pipeline import PipelineConfig, PipelineResult, budgets_for
 from repro.core.policies import PolicyContext, Selection, get_policy
+from repro.core.throttle import clamp_budget_bytes
 
 
 @dataclass
@@ -78,6 +79,13 @@ class Segment:
     bytes_requested: float = 0.0
     bytes_spent: float = 0.0
     pred: Optional[np.ndarray] = None
+    # fault/degradation state (repro.core.faults): transmission attempts
+    # that failed, the retry-with-backoff bookkeeping, and whether the
+    # last attempt's downlink was discarded by the ground
+    retries: int = 0
+    eligible_round: int = 0
+    requeued: bool = False
+    corrupted: bool = False
 
 
 @dataclass
@@ -316,7 +324,10 @@ class Downlink(Stage):
         spend = min(sel.bytes_requested, remaining)
         mission.ledger.charge_downlink(spend, mission.pcfg.bandwidth_mbps)
         if window is not None:
-            window.remaining -= spend
+            # prefix-drain with the denormal/negative underflow clamp:
+            # a remainder below one normal float of bytes is exact 0.0
+            # (bit-exact no-op on any real budget — see throttle)
+            window.remaining = clamp_budget_bytes(window.remaining - spend)
         seg.bytes_requested = sel.bytes_requested
         seg.bytes_spent = spend
         mission.bytes_ledger.requested += sel.bytes_requested
@@ -417,13 +428,25 @@ class Mission:
 
     # -- streaming API ------------------------------------------------------
 
-    def ingest(self, frames, energy_budget_j: float = None) -> IngestReport:
+    def ingest(self, frames, energy_budget_j: float = None, *,
+               blackout: bool = False) -> IngestReport:
         """Run the onboard stages over one frame batch (an orbital pass).
 
         Grants the slice's day-fraction energy budget (or an explicit
         ``energy_budget_j``) to the persistent ledger first; onboard
         counting then runs under whatever energy remains mission-wide.
+
+        ``blackout=True`` skips the pass entirely (a satellite brownout
+        round injected by :mod:`repro.core.faults`): no segment is
+        created, nothing is granted or charged — zero harvest, zero
+        capture — and the mission's stream state is untouched.
         """
+        if blackout:
+            return IngestReport(
+                n_frames=0, n_tiles=0, tiles_processed_space=0,
+                energy_granted_j=0.0,
+                energy_remaining_j=self.ledger.remaining,
+                byte_entitlement=0.0)
         self._finalized = False
         seg = Segment(frames=list(frames),
                       energy_grant_override=energy_budget_j)
@@ -477,9 +500,16 @@ class Mission:
         (per-lane addition order unchanged — see that method)."""
         segs, self._pending = self._pending, []
         if budget_bytes is None:
-            budget_bytes = sum(s.byte_entitlement for s in segs)
-        window = ContactWindow(budget=float(budget_bytes),
-                               remaining=float(budget_bytes))
+            # re-queued segments (failed transmissions awaiting retry)
+            # accrued their entitlement in their FIRST window; offering
+            # it again would double-credit the byte budget
+            budget_bytes = sum(s.byte_entitlement for s in segs
+                               if not s.requeued)
+        # denormal/negative budgets clamp to exact 0.0 before they can
+        # accrue to the ledger or leak into the drain
+        budget_bytes = clamp_budget_bytes(budget_bytes)
+        window = ContactWindow(budget=budget_bytes,
+                               remaining=budget_bytes)
         if accrue:
             self.bytes_ledger.budget += window.budget
         return segs, window

@@ -181,6 +181,19 @@ def throttle_padded(conf, tile_bytes: float, budget_bytes, conf_p: float,
     return np.asarray(tr.space)[:n], np.asarray(tr.downlink)[:n]
 
 
+_BUDGET_TINY = float(np.finfo(np.float64).tiny)
+
+
+def clamp_budget_bytes(n_bytes: float) -> float:
+    """Clamp a window byte budget to exact 0.0 when it is negative or has
+    underflowed to a denormal (same degenerate-window philosophy as
+    :func:`contact_budget_bytes`: a budget below one representable normal
+    float of bytes is not a budget). Normal positive budgets pass through
+    unchanged, so clamping is a bit-exact no-op on every real window."""
+    n_bytes = float(n_bytes)
+    return n_bytes if n_bytes >= _BUDGET_TINY else 0.0
+
+
 def contact_budget_bytes(bandwidth_mbps: float, contact_s: float) -> float:
     """Contact-window byte budget (paper §IV-A3: e.g. 100 Mbps x 6 min).
 

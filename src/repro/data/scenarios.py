@@ -64,6 +64,18 @@ class FleetScenarioSpec:
     window_budget_scale: float = 1e-3
     seed: int = 0
 
+    def fault_plan(self, seed: Optional[int] = None, **knobs):
+        """Fault-bearing rounds for this scenario: a deterministic
+        :class:`~repro.core.faults.FaultPlan` sized to the spec —
+        station outages are drawn as round spans over the spec's real
+        station names; the per-event classes stay lazy rate draws.
+        ``knobs`` are :func:`repro.core.faults.scenario_faults` rates
+        (``drop_rate``, ``truncate_rate``, ``corrupt_rate``,
+        ``blackout_rate``, ``outage_rate``, ``max_retries``,
+        ``refund_policy``, ``worker_faults``)."""
+        from repro.core.faults import scenario_faults
+        return scenario_faults(self, seed, **knobs)
+
 
 @dataclass
 class PassEvent:

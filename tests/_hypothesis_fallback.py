@@ -1,5 +1,12 @@
-"""Minimal stand-in for `hypothesis` so the suite still collects when it
-isn't installed: property tests skip cleanly, everything else runs.
+"""Deterministic mini property runner standing in for `hypothesis`.
+
+When hypothesis is installed the test modules import the real thing and
+this file is inert. When it isn't (the CI image bakes no extra wheels),
+the property tests still RUN — each ``@given`` test executes
+``max_examples`` deterministic examples drawn from a generator seeded by
+the test's name, so failures are reproducible run-to-run and the suite
+exercises the same invariants either way. No shrinking: a falsifying
+example is reported verbatim.
 
 Usage (in test modules):
 
@@ -7,42 +14,104 @@ Usage (in test modules):
         from hypothesis import given, settings, strategies as st
     except ImportError:
         from _hypothesis_fallback import given, settings, strategies as st
+
+Supported surface (what the repo's tests use): ``settings(max_examples=,
+deadline=)``, ``given(*args, **kwargs)`` — positional strategies match
+the test's rightmost parameters (hypothesis's rule) and parameters not
+covered by ``given`` stay in the wrapper's signature, so pytest injects
+them as fixtures (e.g. ``counters``) — and the strategies
+``sampled_from``, ``integers``, ``floats``, ``booleans``, ``lists``.
 """
-import pytest
+import inspect
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
 
 
-def given(*_args, **_kwargs):
-    # NB: the zero-arg replacement must NOT carry the original signature
-    # (no functools.wraps) or pytest would try to resolve the property
-    # arguments as fixtures and error at setup instead of skipping.
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Stashes ``max_examples`` on the test for ``given`` to read (the
+    repo applies ``settings`` as the inner decorator)."""
     def deco(fn):
-        def skipper():
-            pytest.skip("hypothesis not installed (see requirements-dev.txt)")
-        skipper.__name__ = fn.__name__
-        skipper.__doc__ = fn.__doc__
-        return skipper
-    return deco
-
-
-def settings(*_args, **_kwargs):
-    def deco(fn):
+        fn._fallback_max_examples = max_examples
         return fn
     return deco
 
 
-class _Strategy:
-    """Chainable no-op standing in for any strategy expression."""
+def given(*pos_strats, **strats):
+    """Run the test once per example with deterministic draws.
 
-    def __call__(self, *args, **kwargs):
-        return self
+    Positional strategies are matched to the test function's RIGHTMOST
+    parameters (hypothesis's rule, which is what lets ``self``/fixtures
+    sit on the left). The wrapper's signature keeps only the parameters
+    *not* covered by ``given``, so pytest resolves those as fixtures
+    exactly as real hypothesis does.
+    """
+    def deco(fn):
+        n_examples = getattr(fn, "_fallback_max_examples",
+                             _DEFAULT_MAX_EXAMPLES)
+        sig = inspect.signature(fn)
+        if pos_strats:
+            names = list(sig.parameters)[-len(pos_strats):]
+            strats.update(zip(names, pos_strats))
+        fixture_params = [p for name, p in sig.parameters.items()
+                          if name not in strats]
 
-    def __getattr__(self, name):
-        return self
+        def runner(**fixtures):
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for i in range(n_examples):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(**drawn, **fixtures)
+                except Exception as e:
+                    raise AssertionError(
+                        f"Falsifying example (#{i + 1} of {n_examples}, "
+                        f"fallback runner): {fn.__name__}({drawn!r})"
+                    ) from e
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__signature__ = sig.replace(parameters=fixture_params)
+        return runner
+    return deco
 
 
-class _Strategies:
-    def __getattr__(self, name):
-        return _Strategy()
-
-
-strategies = _Strategies()
+st = strategies

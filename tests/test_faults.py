@@ -1,0 +1,547 @@
+"""Fault-injection / degraded-mode tests (repro.core.faults).
+
+The acceptance gates of the robustness PR:
+
+* ``FaultPlan.none()`` (and ``faults=None``) is bit-equal — per-tile
+  predictions, summaries, and every ledger lane — to the fault-free
+  runtime for all five policies on both the engine and reference
+  execution paths and both the batched and FIFO-reference contact paths.
+* Every fault class degrades *deterministically*: a faulty run through
+  the batched ContactPlan executor equals the same faulty run through
+  the scalar FIFO reference, including the fault counters.
+* Degradation semantics: dead-window budgets fold forward, corrupted
+  segments refund (or stay charged, per policy) and retry within the
+  bound, ledgers never go negative and never double-credit, the async
+  watchdog arm recovers injected worker crashes/stalls bit-equal to the
+  synchronous arm, and ``finalize()`` stays safe after mid-round
+  exceptions.
+"""
+import numpy as np
+import pytest
+
+from repro.core.contact import GroundSegment
+from repro.core.faults import FaultPlan, scenario_faults
+from repro.core.fleet import Fleet, run_scenario
+from repro.core.pipeline import PipelineConfig
+from repro.core.throttle import clamp_budget_bytes
+from repro.data.scenarios import (FleetScenarioSpec, GroundStation,
+                                  generate_scenario)
+from repro.data.synthetic import SceneSpec, make_scene, revisit_frames
+
+METHODS = ("space_only", "ground_only", "tiansuan", "kodan", "targetfuse")
+SCENE = SceneSpec("faults", 384, (10, 18), (10, 24), cloud_fraction=0.25)
+# wall-clock/throughput summary keys that legitimately differ run-to-run
+TIMING_KEYS = ("ingest_s", "tiles_per_s", "tiles_per_s_per_sat", "contact_s",
+               "windows_per_s", "bytes_downlinked_per_s", "recount_s",
+               "recount_wait_s", "recount_hidden_frac")
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    """2 satellites x 3 rounds, two stations per round — every round has
+    multiple windows so drops/truncations/corruptions have structure to
+    act on without blowing up the suite's runtime."""
+    return generate_scenario(FleetScenarioSpec(
+        n_sats=2, n_rounds=3, frames_per_pass=1,
+        stations=(GroundStation("gs0"),
+                  GroundStation("gs1", bandwidth_mbps=30.0, contact_s=240.0)),
+        scene_mix=(SCENE,), seed=3))
+
+
+def _frames(seed: int, n_frames: int = 1):
+    rng = np.random.default_rng(seed)
+    img, b, c = make_scene(rng, SCENE)
+    return revisit_frames(rng, img, b, c, n_frames)
+
+
+def _assert_same(a, b, ctx=""):
+    np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred,
+                                  err_msg=f"{ctx}: per-tile preds differ")
+    assert a.summary() == b.summary(), (
+        f"{ctx}: summaries differ:\n{a.summary()}\n{b.summary()}")
+
+
+def _assert_ledgers_equal(fa: Fleet, fb: Fleet, ctx=""):
+    for f in ("budget_j", "e_cap", "e_com", "e_agg", "e_down",
+              "bytes_budget", "bytes_requested", "bytes_spent"):
+        np.testing.assert_array_equal(
+            getattr(fa.ledger, f)[:fa.n_sats],
+            getattr(fb.ledger, f)[:fb.n_sats],
+            err_msg=f"{ctx}: ledger lane {f} differs")
+
+
+def _summary_sans_timing(fleet: Fleet) -> dict:
+    s = fleet.summary()
+    for k in TIMING_KEYS:
+        s.pop(k, None)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# the parity gate: FaultPlan.none() is bit-equal to the fault-free runtime
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_engine", (True, False),
+                         ids=("engine", "reference"))
+@pytest.mark.parametrize("contact_reference", (False, True),
+                         ids=("batched", "fifo"))
+@pytest.mark.parametrize("method", METHODS)
+def test_none_plan_is_bit_exact(method, contact_reference, use_engine,
+                                scenario, counters):
+    """faults=None vs FaultPlan.none(): identical predictions, summaries,
+    and ledger lanes on every policy x execution path x contact path."""
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25,
+                          use_engine=use_engine)
+    got, fn = run_scenario(space, ground, pcfg, scenario,
+                           contact_reference=contact_reference)
+    want, fz = run_scenario(space, ground, pcfg, scenario,
+                            contact_reference=contact_reference,
+                            faults=FaultPlan.none())
+    ctx = f"{method}/{'fifo' if contact_reference else 'batched'}"
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"none-plan {ctx} sat{i}")
+    _assert_ledgers_equal(fn, fz, f"none-plan {ctx}")
+    assert _summary_sans_timing(fn) == _summary_sans_timing(fz)
+    assert fz.summary()["faults_active"] is False
+    assert all(v == 0 for v in vars(fz.fault_stats).values())
+
+
+# ---------------------------------------------------------------------------
+# faulty batched == faulty FIFO reference (the differential gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ("targetfuse", "kodan"))
+def test_faulty_batched_matches_reference(method, scenario, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25)
+    fp = FaultPlan(seed=11, drop_rate=0.2, truncate_rate=0.3,
+                   corrupt_rate=0.4, blackout_rate=0.2)
+    got, fb = run_scenario(space, ground, pcfg, scenario, faults=fp)
+    want, fr = run_scenario(space, ground, pcfg, scenario, faults=fp,
+                            contact_reference=True)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"faulty {method} sat{i}")
+    _assert_ledgers_equal(fb, fr, f"faulty {method}")
+    assert _summary_sans_timing(fb) == _summary_sans_timing(fr)
+    # the schedule actually fired (otherwise this test gates nothing)
+    s = fb.summary()
+    assert s["fault_segments_corrupted"] > 0
+    assert s["fault_blackout_passes"] > 0
+
+
+def test_faulty_run_is_replayable(scenario, counters):
+    """Same seed, same scenario -> byte-identical faulty run (the draws
+    are pure functions of (seed, kind, key); no RNG state)."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fp = FaultPlan(seed=7, drop_rate=0.3, corrupt_rate=0.3)
+    a, fa = run_scenario(space, ground, pcfg, scenario, faults=fp)
+    b, fb = run_scenario(space, ground, pcfg, scenario, faults=fp)
+    for x, y in zip(a, b):
+        _assert_same(x, y, "replay")
+    assert _summary_sans_timing(fa) == _summary_sans_timing(fb)
+
+
+# ---------------------------------------------------------------------------
+# window drop + plan repair (budget folds forward)
+# ---------------------------------------------------------------------------
+
+def test_explicit_drop_folds_budget_into_next_window(counters):
+    """Dropping a window re-lands its explicit budget on the same sat's
+    next surviving window: bit-equal to offering one merged window."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    b1, b2 = 4e5, 6e5
+
+    faulty = Fleet(space, ground, pcfg, n_sats=1,
+                   faults=FaultPlan(window_drops={(0, 0)}))
+    faulty.ingest([_frames(31, 2)])
+    reps = faulty.contact_round(windows=[(0, b1), (0, b2)])
+    assert len(reps) == 1  # the dropped window never executes
+
+    clean = Fleet(space, ground, pcfg, n_sats=1)
+    clean.ingest([_frames(31, 2)])
+    clean.contact_round(windows=[(0, b1 + b2)])
+
+    for a, b in zip(faulty.finalize(), clean.finalize()):
+        _assert_same(a, b, "drop-fold")
+    _assert_ledgers_equal(faulty, clean, "drop-fold")
+    assert faulty.fault_stats.windows_dropped == 1
+    assert faulty.fault_stats.budget_folded == b1
+    assert faulty.fault_stats.budget_lost == 0.0
+
+
+def test_drop_with_no_heir_loses_budget(counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fleet = Fleet(space, ground, pcfg, n_sats=2,
+                  faults=FaultPlan(window_drops={(0, 1)}))
+    fleet.ingest([_frames(32), _frames(33)])
+    reps = fleet.contact_round(windows=[(0, 2e5), (1, 3e5)])
+    assert [s for s, _ in reps] == [0]
+    assert fleet.fault_stats.windows_dropped == 1
+    assert fleet.fault_stats.budget_lost == 3e5
+    assert float(fleet.ledger.bytes_budget[1]) == 0.0
+    fleet.finalize()
+
+
+def test_station_outage_drops_all_its_windows(scenario, counters):
+    """A station outage span kills every window that station offers in
+    those rounds — and the run stays batched-vs-reference exact."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fp = FaultPlan(station_outages=(("gs0", 0, 1),))
+    got, fb = run_scenario(space, ground, pcfg, scenario, faults=fp)
+    want, fr = run_scenario(space, ground, pcfg, scenario, faults=fp,
+                            contact_reference=True)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"outage sat{i}")
+    _assert_ledgers_equal(fb, fr, "outage")
+    # gs0 serves one window per round; rounds 0 and 1 are in the span
+    assert fb.summary()["fault_windows_dropped"] == 2
+    assert fp.station_out("gs0", 1) and not fp.station_out("gs0", 2)
+    assert not fp.station_out("gs1", 0)
+
+
+# ---------------------------------------------------------------------------
+# mid-window truncation
+# ---------------------------------------------------------------------------
+
+def test_explicit_truncation_cuts_budget_at_segment(counters):
+    """Truncation at pending position t: segments before t drain
+    normally (bit-equal to the clean run), later ones see a dead link."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+
+    faulty = Fleet(space, ground, pcfg, n_sats=1,
+                   faults=FaultPlan(window_truncations={(0, 0): 1}))
+    clean = Fleet(space, ground, pcfg, n_sats=1)
+    for fl in (faulty, clean):
+        for k in range(3):  # three pending segments FIFO in one window
+            fl.ingest([_frames(41 + k)])
+        fl.contact_round(windows=[(0, 1e9)])
+
+    fs, cs = faulty.missions[0]._segments, clean.missions[0]._segments
+    assert faulty.fault_stats.windows_truncated == 1
+    assert fs[0].bytes_spent == cs[0].bytes_spent  # before the cut
+    assert all(s.bytes_spent == 0.0 for s in fs[1:])  # after the cut
+    assert float(faulty.ledger.bytes_spent[0]) == fs[0].bytes_spent
+    faulty.finalize(), clean.finalize()
+
+
+# ---------------------------------------------------------------------------
+# corrupted segments: refund policies, bounded retry, permanent loss
+# ---------------------------------------------------------------------------
+
+def test_corruption_refund_policy_reconciles_ledger(counters):
+    """"refund": the wasted transmission's bytes AND radio energy are
+    refunded with the exact inverse charge; "charge": they stay spent.
+    Either way the ground never credits the corrupted bytes."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+
+    def run(policy):
+        fl = Fleet(space, ground, pcfg, n_sats=1,
+                   faults=FaultPlan(segment_corruptions={(0, 0, 0)},
+                                    max_retries=0, refund_policy=policy))
+        fl.ingest([_frames(51)])
+        fl.contact_round(windows=[(0, 1e9)])
+        fl.finalize()
+        return fl
+
+    clean = Fleet(space, ground, pcfg, n_sats=1)
+    clean.ingest([_frames(51)])
+    clean.contact_round(windows=[(0, 1e9)])
+    clean.finalize()
+    spent = float(clean.ledger.bytes_spent[0])
+    assert spent > 0.0
+
+    refunded = run("refund")
+    assert refunded.fault_stats.segments_lost == 1
+    assert refunded.fault_stats.bytes_wasted == spent
+    assert refunded.fault_stats.bytes_refunded == spent
+    assert float(refunded.ledger.bytes_spent[0]) == 0.0
+    assert float(refunded.ledger.e_down[0]) == 0.0
+
+    charged = run("charge")
+    assert charged.fault_stats.bytes_refunded == 0.0
+    assert charged.fault_stats.bytes_wasted == spent
+    assert float(charged.ledger.bytes_spent[0]) == spent
+    np.testing.assert_array_equal(charged.ledger.e_down[:1],
+                                  clean.ledger.e_down[:1])
+
+    # lost downlink-side: the ground credits nothing for those tiles
+    for fl in (refunded, charged):
+        seg = fl.missions[0]._segments[0]
+        down = seg.selection.downlink
+        assert len(down) and (seg.counts_gd == 0.0).all()
+
+
+def test_retry_recovers_within_bound(counters):
+    """A twice-corrupted segment retries with linear backoff and, on the
+    third transmission, delivers — final predictions equal the clean
+    run's, and retries never exceed max_retries."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    # corrupt the segment's first two transmissions: round 0, and its
+    # backoff-delayed retry in round 1; round 3 (backoff 2) delivers
+    fp = FaultPlan(segment_corruptions={(0, 0, 0), (1, 0, 0)},
+                   max_retries=2)
+    faulty = Fleet(space, ground, pcfg, n_sats=1, faults=fp)
+    clean = Fleet(space, ground, pcfg, n_sats=1)
+    for fl in (faulty, clean):
+        fl.ingest([_frames(61)])
+        for _ in range(4):
+            fl.contact_round(windows=[(0, 1e9)])
+    seg = faulty.missions[0]._segments[0]
+    assert seg.retries == 2 <= fp.max_retries
+    assert faulty.fault_stats.segments_requeued == 2
+    assert faulty.fault_stats.segments_lost == 0
+    [fa], [ca] = faulty.finalize(), clean.finalize()
+    np.testing.assert_array_equal(fa.per_tile_pred, ca.per_tile_pred)
+    fs, cs = fa.summary(), ca.summary()
+    # the recovered run re-transmitted the corrupted segment twice: its
+    # downlink traffic exceeds the clean run's by exactly the waste
+    assert fs.pop("bytes_downlinked") == (cs.pop("bytes_downlinked")
+                                          + faulty.fault_stats.bytes_wasted)
+    assert fs == cs
+
+    # the identical schedule with retries disabled loses the segment
+    lost = Fleet(space, ground, pcfg, n_sats=1, faults=fp.with_retries(0))
+    lost.ingest([_frames(61)])
+    for _ in range(4):
+        lost.contact_round(windows=[(0, 1e9)])
+    assert lost.fault_stats.segments_lost == 1
+    assert lost.fault_stats.segments_requeued == 0
+    assert (lost.fault_stats.bytes_delivered
+            < faulty.fault_stats.bytes_delivered)
+    lost.finalize()
+
+
+def test_finalize_drains_backoff_held_segments(counters):
+    """A re-queued segment still waiting out its backoff when the
+    scenario ends drains through the (never-faulted) finalize flush —
+    nothing pends afterwards, and its onboard results still land."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fl = Fleet(space, ground, pcfg, n_sats=1,
+               faults=FaultPlan(segment_corruptions={(0, 0, 0)},
+                                max_retries=3))
+    fl.ingest([_frames(71)])
+    fl.contact_round(windows=[(0, 1e9)])  # corrupts; backoff holds it
+    assert fl.pending_segments == [1]
+    res = fl.finalize()
+    assert fl.pending_segments == [0]
+    assert len(res[0].per_tile_pred) == fl.missions[0]._segments[0].n
+
+
+# ---------------------------------------------------------------------------
+# blackouts
+# ---------------------------------------------------------------------------
+
+def test_blackout_skips_pass_and_matches_oracle(scenario, counters):
+    """Blacked-out passes ingest nothing and charge nothing; the fleet
+    path equals the looped-Mission oracle under the same draws."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fp = FaultPlan(seed=5, drop_rate=0.3, blackout_rate=0.3)
+    got, fb = run_scenario(space, ground, pcfg, scenario, faults=fp)
+    want, _ = run_scenario(space, ground, pcfg, scenario, faults=fp,
+                           fleet=False)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"blackout sat{i}")
+    assert fb.summary()["fault_blackout_passes"] > 0
+
+
+def test_oracle_rejects_segment_granular_faults(scenario, counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    with pytest.raises(ValueError, match="oracle"):
+        run_scenario(space, ground, pcfg, scenario, fleet=False,
+                     faults=FaultPlan(corrupt_rate=0.5))
+
+
+# ---------------------------------------------------------------------------
+# async ground worker: crash / stall + watchdog recovery
+# ---------------------------------------------------------------------------
+
+def test_watchdog_recovers_injected_crash_bit_exact(scenario, counters):
+    """An injected worker crash is absorbed by the watchdog (synchronous
+    recount retry) — the async arm stays bit-equal to the synchronous
+    arm, fault counters aside."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fp = FaultPlan(worker_faults={0: "crash"})
+    got, fa = run_scenario(space, ground, pcfg, scenario, faults=fp,
+                           async_ground=True, watchdog_s=5.0)
+    want, fs = run_scenario(space, ground, pcfg, scenario, faults=fp)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"crash-recovery sat{i}")
+    _assert_ledgers_equal(fa, fs, "crash-recovery")
+    assert fa.summary()["fault_worker_crashes"] == 1
+    assert fa.summary()["fault_watchdog_recoveries"] == 1
+    # worker faults target the async worker; the sync arm has none
+    assert fs.summary()["fault_worker_crashes"] == 0
+
+
+def test_watchdog_recovers_stalled_worker(scenario, counters):
+    """A stalled worker blows the watchdog timeout: it is cancelled and
+    the recount re-runs synchronously, bit-equal to the sync arm."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fp = FaultPlan(worker_faults={0: "stall"}, stall_s=5.0)
+    got, fa = run_scenario(space, ground, pcfg, scenario, faults=fp,
+                           async_ground=True, watchdog_s=0.05)
+    want, _ = run_scenario(space, ground, pcfg, scenario, faults=fp)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"stall-recovery sat{i}")
+    assert fa.summary()["fault_worker_stalls"] == 1
+    assert fa.summary()["fault_watchdog_recoveries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: context managers, mid-round exceptions, ledger integrity
+# ---------------------------------------------------------------------------
+
+def test_ground_segment_context_manager_joins_worker(counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    fleet = Fleet(space, ground, pcfg, n_sats=1, async_ground=True)
+    assert isinstance(fleet.ground_segment, GroundSegment)
+    with fleet:
+        fleet.ingest([_frames(81, 2)])
+        fleet.contact_round(windows=[(0, 4e6)])
+        assert fleet.ground_segment.rounds_deferred == 1
+    # clean exit synced: no worker thread left behind
+    assert fleet.ground_segment._thread is None
+    assert fleet.ground_segment._jobs is None
+
+
+def test_exceptional_exit_closes_without_raising(counters):
+    """An exception inside the `with` block tears the worker down via
+    close() — no secondary error, no leaked thread, close idempotent."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    fleet = Fleet(space, ground, pcfg, n_sats=1, async_ground=True)
+
+    def boom(*a, **k):
+        raise RuntimeError("recount exploded")
+
+    with pytest.raises(RuntimeError, match="user error"):
+        with fleet:
+            fleet.ingest([_frames(82)])
+            fleet.missions[0].contact_stages[3].run = boom  # Aggregate
+            fleet.contact_round(windows=[(0, 2e6)])
+            raise RuntimeError("user error")
+    assert fleet.ground_segment._thread is None
+    fleet.close()  # idempotent
+    fleet.close()
+
+
+def test_finalize_safe_after_worker_exception(counters):
+    """A real (non-injected) worker failure surfaces exactly once at
+    sync with every ledger lane intact — recounts charge nothing — and
+    the fleet still finalizes afterwards."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    broken = Fleet(space, ground, pcfg, n_sats=1, async_ground=True)
+    clean = Fleet(space, ground, pcfg, n_sats=1)
+    for fl in (broken, clean):
+        fl.ingest([_frames(83, 2)])
+
+    def boom(*a, **k):
+        raise RuntimeError("recount exploded")
+
+    broken.missions[0].contact_stages[3].run = boom  # Aggregate
+    broken.contact_round(windows=[(0, 4e6)])
+    clean.contact_round(windows=[(0, 4e6)])
+    with pytest.raises(RuntimeError, match="recount exploded"):
+        broken.ground_segment.sync()
+    # the failed round changed no ledger lane vs the healthy run
+    _assert_ledgers_equal(broken, clean, "post-exception")
+    del broken.missions[0].contact_stages[3].run  # heal the stage
+    res = broken.finalize()
+    assert broken.pending_segments == [0]
+    assert len(res) == 1
+
+
+# ---------------------------------------------------------------------------
+# budget clamping at the accrual seam (denormal underflow regression)
+# ---------------------------------------------------------------------------
+
+def test_clamp_budget_bytes_kills_denormals():
+    tiny = float(np.finfo(np.float64).tiny)
+    assert clamp_budget_bytes(5e-324) == 0.0          # denormal -> exact 0
+    assert clamp_budget_bytes(tiny / 2) == 0.0
+    assert clamp_budget_bytes(0.0) == 0.0
+    assert clamp_budget_bytes(-1.0) == 0.0            # never negative
+    assert clamp_budget_bytes(tiny) == tiny           # smallest normal kept
+    assert clamp_budget_bytes(123.5) == 123.5         # normal scale: no-op
+
+
+def test_denormal_window_budget_clamps_at_accrual(counters):
+    """A denormal window budget accrues as exactly 0.0 through
+    ``accrue_window_budgets`` (and spends nothing) instead of leaking a
+    subnormal into the ledger lane."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fleet = Fleet(space, ground, pcfg, n_sats=1)
+    fleet.ingest([_frames(91)])
+    [(_, rep)] = fleet.contact_round(windows=[(0, 5e-324)])
+    assert rep.budget_bytes == 0.0
+    assert rep.bytes_spent == 0.0
+    assert float(fleet.ledger.bytes_budget[0]) == 0.0
+    assert float(fleet.ledger.bytes_spent[0]) == 0.0
+    fleet.finalize()
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan construction, draws, scenario sizing
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="refund_policy"):
+        FaultPlan(refund_policy="ignore")
+    with pytest.raises(ValueError, match="max_retries"):
+        FaultPlan(max_retries=-1)
+    with pytest.raises(ValueError, match="drop_rate"):
+        FaultPlan(drop_rate=1.5)
+    with pytest.raises(ValueError, match="station outage"):
+        FaultPlan(station_outages=(("gs0", 3, 1),))
+    with pytest.raises(ValueError, match="crash"):
+        FaultPlan(worker_faults={0: "explode"}).worker_fault(0)
+
+
+def test_fault_plan_none_is_empty_and_draws_are_pure():
+    assert FaultPlan.none().empty
+    assert not FaultPlan(drop_rate=0.1).empty
+    assert not FaultPlan(window_drops={(0, 0)}).empty
+    fp = FaultPlan(seed=9, drop_rate=0.5, corrupt_rate=0.5)
+    # draw order can never perturb the schedule: pure (seed, key) fns
+    a = [fp.window_dropped(r, w) for r in range(4) for w in range(4)]
+    _ = fp.segment_corrupted(2, 1, 0)
+    b = [fp.window_dropped(r, w) for r in range(4) for w in range(4)]
+    assert a == b
+    assert any(a) and not all(a)  # the rate actually bites both ways
+    # distinct fault classes draw independently even on the same key
+    fp2 = FaultPlan(seed=9, drop_rate=0.5, truncate_rate=0.5)
+    drops = [fp2.window_dropped(r, 0) for r in range(32)]
+    truncs = [fp2.truncated_at(r, 0, 4) is not None for r in range(32)]
+    assert drops != truncs
+
+
+def test_scenario_faults_sizes_outages_to_spec():
+    spec = FleetScenarioSpec(
+        n_sats=2, n_rounds=6,
+        stations=(GroundStation("gs0"), GroundStation("gs1")), seed=4)
+    fp = spec.fault_plan(outage_rate=1.0, drop_rate=0.1)
+    assert fp.seed == spec.seed
+    assert len(fp.station_outages) == len(spec.stations)
+    names = {n for n, _, _ in fp.station_outages}
+    assert names == {"gs0", "gs1"}
+    for _, first, last in fp.station_outages:
+        assert 0 <= first <= last < spec.n_rounds
+    # deterministic in the seed
+    assert fp == spec.fault_plan(outage_rate=1.0, drop_rate=0.1)
+    assert scenario_faults(spec, 99).empty  # all rates default to 0

@@ -1,8 +1,10 @@
 """Property-based Mission budget-conservation invariants (hypothesis).
 
 Runs under real hypothesis when installed (see requirements-dev.txt);
-otherwise the `_hypothesis_fallback` shim skips these cleanly. All
-generative tests are marked ``slow`` so `-m "not slow"` deselects them.
+otherwise the `_hypothesis_fallback` mini runner executes each property
+over deterministic seeded examples, so the invariants are exercised
+either way. All generative tests are marked ``slow`` so `-m "not slow"`
+deselects them.
 
 Invariants (paper §III-A-1 budget model):
   * onboard energy classes (capture/compute/aggregate) never overdraw
@@ -28,6 +30,7 @@ try:
 except ImportError:  # property tests skip; the rest of the suite runs
     from _hypothesis_fallback import given, settings, strategies as st
 
+from repro.core.faults import FaultPlan
 from repro.core.fleet import Fleet
 from repro.core.mission import Mission
 from repro.core.pipeline import PipelineConfig
@@ -225,6 +228,85 @@ def test_batched_plan_matches_reference_property(method, seed, budgets,
     for a, b in zip(got, want):
         np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred)
         assert a.summary() == b.summary()
+    for f in ("budget_j", "e_down", "bytes_budget", "bytes_requested",
+              "bytes_spent"):
+        np.testing.assert_array_equal(getattr(fb.ledger, f),
+                                      getattr(fr.ledger, f))
+
+
+# ---------------------------------------------------------------------------
+# fault-injection properties (repro.core.faults)
+# ---------------------------------------------------------------------------
+
+def _faulty_fleet(space, ground, faults, seed, reference=False):
+    fleet = Fleet(space, ground, _pcfg("targetfuse"), n_sats=2,
+                  faults=faults, contact_reference=reference)
+    tb = fleet.missions[0].tile_bytes
+    for k in range(3):
+        fleet.ingest([_frames(seed + k, 1), _frames(seed + 11 * k + 5, 1)])
+        fleet.contact_round(stations=2, budget_bytes=2.0 * tb)
+    return fleet
+
+
+@given(seed=st.integers(0, 2**20), drop=st.floats(0.0, 0.4),
+       corrupt=st.floats(0.0, 0.6), blackout=st.floats(0.0, 0.4),
+       retries=st.integers(0, 2),
+       policy=st.sampled_from(("refund", "charge")))
+@settings(max_examples=6, deadline=None)
+def test_fault_ledger_and_retry_invariants(seed, drop, corrupt, blackout,
+                                           retries, policy, counters):
+    """Under ANY generated FaultPlan: ledgers never go negative, no
+    segment is ground-credited twice (every segment contributes exactly
+    one prediction block), retries never exceed the bound, refunds never
+    exceed waste, and ``finalize()`` drains everything not permanently
+    lost."""
+    space, ground = counters
+    faults = FaultPlan(seed=seed, drop_rate=drop, truncate_rate=0.3,
+                       corrupt_rate=corrupt, blackout_rate=blackout,
+                       max_retries=retries, refund_policy=policy)
+    fleet = _faulty_fleet(space, ground, faults, seed)
+    res = fleet.finalize()
+    assert fleet.pending_segments == [0, 0]
+    for m, r in zip(fleet.missions, res):
+        segs = m._segments
+        assert all(s.pred is not None for s in segs)
+        # one prediction block per segment == never credited twice
+        assert len(r.per_tile_pred) == sum(s.n for s in segs)
+        assert all(s.retries <= faults.max_retries for s in segs)
+    led = fleet.ledger
+    for f in ("budget_j", "e_cap", "e_com", "e_agg", "e_down",
+              "bytes_budget", "bytes_spent"):
+        assert (getattr(led, f)[:2] >= 0.0).all(), f"{f} went negative"
+    stats = fleet.fault_stats
+    assert stats.bytes_refunded <= stats.bytes_wasted + 1e-9
+    if policy == "charge":
+        assert stats.bytes_refunded == 0.0
+    # net ledger spend reconciles with the byte-flow accounting
+    assert float(led.bytes_spent[:2].sum()) == pytest.approx(
+        stats.bytes_delivered + stats.bytes_wasted - stats.bytes_refunded,
+        rel=1e-9, abs=1e-6)
+
+
+@given(seed=st.integers(0, 2**20), drop=st.floats(0.0, 0.4),
+       trunc=st.floats(0.0, 0.5), corrupt=st.floats(0.0, 0.5),
+       retries=st.integers(0, 2))
+@settings(max_examples=4, deadline=None)
+def test_faulty_batched_matches_reference_property(seed, drop, trunc,
+                                                   corrupt, retries,
+                                                   counters):
+    """Generative differential gate: ANY drawn fault schedule produces
+    identical predictions, summaries, fault counters, and ledger lanes
+    through the batched executor and the scalar FIFO reference."""
+    space, ground = counters
+    faults = FaultPlan(seed=seed, drop_rate=drop, truncate_rate=trunc,
+                       corrupt_rate=corrupt, max_retries=retries)
+    fb = _faulty_fleet(space, ground, faults, seed)
+    fr = _faulty_fleet(space, ground, faults, seed, reference=True)
+    got, want = fb.finalize(), fr.finalize()
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred)
+        assert a.summary() == b.summary()
+    assert fb.fault_stats == fr.fault_stats
     for f in ("budget_j", "e_down", "bytes_budget", "bytes_requested",
               "bytes_spent"):
         np.testing.assert_array_equal(getattr(fb.ledger, f),
