@@ -59,7 +59,16 @@ deterministic fault injection at increasing fault rates
 drops and segment corruption, plus pinned corruption of round 0's
 windows so corruption provably fires — and is provably re-served by
 the rotation — at every nonzero rate), on the dense multi-window
-scenario, recording detection error and contact throughput per rate. Three gates ride along: (1) the **disabled-path
+scenario, recording detection error and contact throughput per rate.
+
+**Orbital sweep** — the contact tier driven by the orbital geometry
+engine (``geometry="orbital"``, ``FLEET_BENCH_ORBITAL_SATS``, default
+16 satellites over the ``FLEET_BENCH_STATIONS`` site network): contact
+windows come from extracted passes (elevation-priced bandwidth,
+duration-integrated budgets — a heavy-tailed window mix, recorded as
+budget p90/p50 skew) instead of the round-robin rotation. Batched
+ContactPlan vs FIFO-loop reference, 0.0-deviation parity gate; set
+``FLEET_BENCH_ORBITAL_SATS=0`` to disable. Three gates ride along: (1) the **disabled-path
 overhead** of the fault subsystem — ``FaultPlan.none()`` vs
 ``faults=None`` — stays < 2% (full-size sweep only, and only when the
 box's same-arm timing noise floor can resolve 2%; the parity of the
@@ -220,6 +229,99 @@ def _stations_sweep(rows, report):
                  sb["contact_s"] * 1e6,
                  f"speedup={speedup:.2f}x hidden={hidden:.2f} "
                  f"wps={sb['windows_per_s']:.1f} dev={max_dev:.1e}"))
+    return row
+
+
+def _orbital_spec(n_sats, n_stations, seed):
+    """The stations-sweep scenario re-based on real orbital geometry:
+    contacts come from extracted passes over a globally dispersed site
+    network (heavy-tailed pass mix — many low-elevation grazes, few
+    long overhead passes), harvest grants from eclipse fractions."""
+    from repro.data.scenarios import FleetScenarioSpec, GroundStation
+    from repro.data.synthetic import SceneSpec
+    from repro.orbits.schedule import default_sites
+
+    n_rounds, _, frames_per_pass = _bench_knobs()
+    scene = SceneSpec("orbital", 384, (10, 20), (10, 24), cloud_fraction=0.25)
+    sites = default_sites(n_stations)
+    stations = tuple(
+        GroundStation(f"gs{k}", bandwidth_mbps=30.0 + 5.0 * (k % 5),
+                      contact_s=240.0 + 30.0 * (k % 3), site=sites[k])
+        for k in range(n_stations))
+    return FleetScenarioSpec(
+        n_sats=n_sats, n_rounds=n_rounds, frames_per_pass=frames_per_pass,
+        stations=stations, scene_mix=(scene,), seed=seed,
+        geometry="orbital", min_elev_deg=5.0)
+
+
+def _orbital_sweep(rows, report):
+    """The contact tier fed by the orbital geometry engine: batched
+    ContactPlan vs FIFO-loop reference over pass-derived windows.
+    Parity gate always (0.0 deviation); the interesting report numbers
+    are the pass-mix skew the extracted schedule exhibits."""
+    import numpy as np
+
+    from benchmarks.common import counters
+    from repro.core.fleet import run_scenario
+    from repro.core.pipeline import PipelineConfig
+    from repro.data.scenarios import generate_scenario
+
+    n_sats = int(os.environ.get("FLEET_BENCH_ORBITAL_SATS", "16"))
+    n_stations = int(os.environ.get("FLEET_BENCH_STATIONS", "8"))
+    if n_sats <= 0 or n_stations <= 0:
+        return None
+    n_rounds, iters, _ = _bench_knobs()
+    space, ground = counters()
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    sc = generate_scenario(_orbital_spec(n_sats, n_stations, seed=6))
+    budgets = np.array([c.budget_bytes
+                        for r in sc.rounds for c in r.contacts])
+    n_windows = budgets.size
+
+    def arm(**kw):
+        return run_scenario(space, ground, pcfg, sc, fleet=True, **kw)
+
+    arms = (("batched", {}), ("reference", {"contact_reference": True}))
+    for _, kw in arms:
+        arm(**kw)
+    best, res_by = {}, {}
+    for _ in range(iters):
+        for name, kw in arms:
+            res, fl = arm(**kw)
+            s = fl.summary()
+            if name not in best or s["contact_s"] < best[name]["contact_s"]:
+                best[name] = s
+            res_by[name] = res
+
+    max_dev = 0.0
+    for a, b in zip(res_by["batched"], res_by["reference"]):
+        if a.per_tile_pred.size:
+            max_dev = max(max_dev, float(np.max(np.abs(
+                a.per_tile_pred - b.per_tile_pred))))
+        assert a.summary() == b.summary(), \
+            "orbital contact reference arm summary mismatch"
+    sb = best["batched"]
+    row = {
+        "n_sats": n_sats, "stations": n_stations, "rounds": n_rounds,
+        "geometry": "orbital",
+        "n_windows": int(n_windows),
+        "windows_served": sb["windows_served"],
+        "batched_contact_s": sb["contact_s"],
+        "reference_contact_s": best["reference"]["contact_s"],
+        "budget_p50_bytes": float(np.median(budgets)) if n_windows else 0.0,
+        "budget_p90_bytes": (float(np.percentile(budgets, 90))
+                             if n_windows else 0.0),
+        "budget_skew_p90_over_p50": (
+            float(np.percentile(budgets, 90) / max(np.median(budgets), 1e-9))
+            if n_windows else 0.0),
+        "pred_max_dev": max_dev,
+    }
+    report[f"orbital_{n_sats}sats_{n_stations}st"] = row
+    rows.append((f"fleet_orbital_{n_sats}sats_{n_stations}st",
+                 sb["contact_s"] * 1e6,
+                 f"windows={n_windows} "
+                 f"skew={row['budget_skew_p90_over_p50']:.2f}x "
+                 f"dev={max_dev:.1e}"))
     return row
 
 
@@ -547,6 +649,7 @@ def run(json_path: str = None):
     rows, report = [], {}
     _size_sweep(rows, report)
     contact = _stations_sweep(rows, report)
+    orbital = _orbital_sweep(rows, report)
     faults = _faults_sweep(rows, report)
     shard_dev = _devices_sweep(rows, report)
 
@@ -571,6 +674,10 @@ def run(json_path: str = None):
         "contact_pred_max_dev": (contact["pred_max_dev"]
                                  if contact else None),
         "contact_parity_tol": CONTACT_PARITY_TOL,
+        "orbital_pred_max_dev": (orbital["pred_max_dev"]
+                                 if orbital else None),
+        "orbital_budget_skew": (orbital["budget_skew_p90_over_p50"]
+                                if orbital else None),
         "async_recount_hidden_frac": (
             contact["async_recount_hidden_frac"] if contact else None),
         "async_hide_gate": ASYNC_HIDE_GATE,
@@ -613,6 +720,12 @@ def run(json_path: str = None):
             f"{contact['pred_max_dev']:.3e} exceeds "
             f"{CONTACT_PARITY_TOL} across batched/reference/async arms "
             f"(see {json_path})")
+    if orbital and orbital["pred_max_dev"] > CONTACT_PARITY_TOL:
+        raise AssertionError(
+            f"orbital contact parity gate: pred_max_dev="
+            f"{orbital['pred_max_dev']:.3e} exceeds {CONTACT_PARITY_TOL} "
+            f"between batched and reference arms on the pass-derived "
+            f"schedule (see {json_path})")
     if report["_summary"]["gate_speedup_at_8_sats"] is False:
         raise AssertionError(
             f"fleet speedup gate: {report['sats_8']['speedup']:.2f}x < "

@@ -16,7 +16,7 @@ import sys
 import time
 
 FIGS = ("fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-        "pipeline", "fleet", "kernels")
+        "pipeline", "fleet", "kernels", "orbits")
 
 
 def main() -> None:
@@ -66,6 +66,9 @@ def main() -> None:
         mods.append(m)
     if "kernels" in want:
         from benchmarks import kernel_bench as m
+        mods.append(m)
+    if "orbits" in want:
+        from benchmarks import orbits_bench as m
         mods.append(m)
 
     results = {}

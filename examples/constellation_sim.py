@@ -22,6 +22,15 @@ device mesh (on CPU, force host devices first:
 ``--check`` that asserts the sharded fleet against the sequential
 oracle.
 
+``--geometry orbital`` swaps the toy phase-offset scenario for the
+orbital geometry engine (:mod:`repro.orbits`): a Walker-delta
+constellation is batch-propagated over the horizon, contact windows
+come from extracted ground-station passes (elevation-priced bandwidth,
+duration-integrated budgets) over a globally dispersed site network
+(``--stations N``), and harvest grants come from cylindrical
+Earth-shadow eclipse fractions. The fleet/contact tiers are untouched —
+``--check`` asserts the same exact parity on the orbital event stream.
+
 ``--faults SEED`` turns on deterministic fault injection
 (:mod:`repro.core.faults`): dropped windows, station outages,
 mid-window truncations, corrupted downlink segments with bounded
@@ -53,6 +62,13 @@ def main():
     ap.add_argument("--rounds", type=int, default=4,
                     help="orbital pass rounds (one contact per station each)")
     ap.add_argument("--bandwidth", type=float, default=50.0)
+    ap.add_argument("--geometry", choices=("toy", "orbital"), default="toy",
+                    help="scenario geometry: 'toy' phase-offset model "
+                         "(default) or the batched orbital engine")
+    ap.add_argument("--stations", type=int, default=None,
+                    help="ground stations (default: 1 toy, 3 orbital)")
+    ap.add_argument("--min-elev", type=float, default=5.0,
+                    help="orbital pass-extraction elevation mask (deg)")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the fleet across this many devices "
                          "(sats mesh axis)")
@@ -79,12 +95,26 @@ def main():
 
     mesh = sats_mesh(args.devices)  # None for --devices 1
     space, ground = get_counters()
-    spec = FleetScenarioSpec(
-        n_sats=args.sats, n_rounds=args.rounds, frames_per_pass=2,
-        stations=(GroundStation("gs0", bandwidth_mbps=args.bandwidth),),
-        scene_mix=(SceneSpec("track", 512, (16, 28), (10, 24),
-                             cloud_fraction=0.3),),
-        seed=7)
+    scene_mix = (SceneSpec("track", 512, (16, 28), (10, 24),
+                           cloud_fraction=0.3),)
+    if args.geometry == "orbital":
+        from repro.orbits.schedule import default_sites
+        n_st = args.stations or 3
+        sites = default_sites(n_st)
+        stations = tuple(
+            GroundStation(f"gs{k}", bandwidth_mbps=args.bandwidth,
+                          site=sites[k]) for k in range(n_st))
+        spec = FleetScenarioSpec(
+            n_sats=args.sats, n_rounds=args.rounds, frames_per_pass=2,
+            stations=stations, scene_mix=scene_mix, seed=7,
+            geometry="orbital", min_elev_deg=args.min_elev)
+    else:
+        stations = tuple(
+            GroundStation(f"gs{k}", bandwidth_mbps=args.bandwidth)
+            for k in range(args.stations or 1))
+        spec = FleetScenarioSpec(
+            n_sats=args.sats, n_rounds=args.rounds, frames_per_pass=2,
+            stations=stations, scene_mix=scene_mix, seed=7)
     scenario = generate_scenario(spec)
     pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25,
                           bandwidth_mbps=args.bandwidth)
@@ -100,7 +130,11 @@ def main():
     path = ("oracle (looped Missions)" if args.oracle else
             f"fleet ({args.devices} device(s))")
     print(f"== {args.sats}-satellite constellation, {args.rounds} rounds, "
-          f"{path} path ==")
+          f"{args.geometry} geometry, {path} path ==")
+    if args.geometry == "orbital":
+        n_windows = sum(len(r.contacts) for r in scenario.rounds)
+        print(f"  {len(stations)} sites, min elevation {args.min_elev:.0f} "
+              f"deg -> {n_windows} extracted pass windows")
     for rnd in scenario.rounds:
         sunlit = sum(p.sunlit for p in rnd.passes)
         for c in rnd.contacts:

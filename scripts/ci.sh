@@ -34,6 +34,11 @@ echo "   scenario-driven ContactPlans + overlapped ground recount) =="
 timeout 600 python examples/constellation_sim.py --sats 2 --rounds 2 --check \
   --async-ground
 
+echo "== example smoke: orbital geometry constellation (batched Keplerian"
+echo "   propagation -> extracted passes -> ContactPlans, parity-checked) =="
+timeout 600 python examples/constellation_sim.py --sats 2 --rounds 3 \
+  --geometry orbital --check
+
 echo "== example smoke: faulty constellation (seeded fault injection,"
 echo "   batched-vs-FIFO-reference parity under faults) =="
 timeout 600 python examples/constellation_sim.py --sats 2 --rounds 3 \
@@ -57,6 +62,14 @@ echo "   fault-sweep retry/watchdog parity gates) =="
 FLEET_BENCH_SATS=2 FLEET_BENCH_ROUNDS=1 FLEET_BENCH_ITERS=1 \
   FLEET_BENCH_DEVICES=1,2 FLEET_BENCH_SHARD_SATS=3 \
   FLEET_BENCH_STATIONS=2 FLEET_BENCH_CONTACT_SATS=3 \
+  FLEET_BENCH_ORBITAL_SATS=4 \
   FLEET_BENCH_FAULT_SATS=2 FLEET_BENCH_FAULT_RATES=0,0.25 \
   FLEET_BENCH_JSON=BENCH_fleet_smoke.json \
   timeout 900 python -m benchmarks.run fleet --strict
+
+echo "== orbits bench smoke (tiny catalog; propagation/visibility/pass"
+echo "   extraction/eclipse rows — throughput gate enforced on full size"
+echo "   only, honest numbers recorded either way) =="
+ORBITS_BENCH_SATS=64 ORBITS_BENCH_STEPS=128 ORBITS_BENCH_STATIONS=2 \
+  ORBITS_BENCH_JSON=BENCH_orbits_smoke.json \
+  timeout 900 python -m benchmarks.run orbits --strict

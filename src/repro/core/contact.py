@@ -177,13 +177,17 @@ class ContactPlan:
     @staticmethod
     def from_contacts(contacts, n_sats: int) -> "ContactPlan":
         """From :class:`repro.data.scenarios.ContactEvent` objects — the
-        scenario generator's per-round contact schedule becomes the
-        round's plan directly."""
+        scenario generator's per-round contact schedule (toy round-robin
+        or the orbital pass extractor's) becomes the round's plan
+        directly. ``station`` may be a :class:`GroundStation`-like
+        object (its ``name`` labels the window) or a plain string, so
+        lightweight schedule sources need not build station objects."""
         return ContactPlan(
             sats=np.array([c.sat for c in contacts], np.int64),
             budgets=np.array([c.budget_bytes for c in contacts], np.float64),
             entitlement=np.zeros(len(contacts), bool),
-            stations=tuple(c.station.name for c in contacts),
+            stations=tuple(getattr(c.station, "name", c.station)
+                           for c in contacts),
             n_sats=int(n_sats))
 
     def window_budget(self, w: int) -> Optional[float]:

@@ -41,6 +41,9 @@ class GroundStation:
     name: str
     bandwidth_mbps: float = 50.0
     contact_s: float = 360.0
+    # (lat_deg, lon_deg) ground site; required by geometry="orbital"
+    # (the toy path never looks at it, so existing specs are unchanged)
+    site: Optional[Tuple[float, float]] = None
 
 
 @dataclass(frozen=True)
@@ -63,6 +66,58 @@ class FleetScenarioSpec:
     # (a full 50 Mbps x 6 min window is ~2.25 GB — far beyond a slice)
     window_budget_scale: float = 1e-3
     seed: int = 0
+    # geometry backend: "toy" keeps the phase-offset model above
+    # bit-identical; "orbital" routes through repro.orbits (batched
+    # Keplerian propagation, real passes, eclipse-derived harvest)
+    geometry: str = "toy"
+    # orbital-path knobs (ignored by the toy path)
+    alt_km: float = 550.0
+    inc_deg: float = 53.0
+    n_planes: int = 0                # 0 = auto near-square Walker grid
+    min_elev_deg: float = 10.0       # pass-extraction horizon mask
+    time_step_s: float = 15.0        # propagation grid resolution
+
+    def __post_init__(self):
+        """Fail-at-build validation, same contract as ``ContactPlan``:
+        a malformed spec raises here, not rounds later inside the
+        generator or the energy ledger."""
+        if self.geometry not in ("toy", "orbital"):
+            raise ValueError(f"FleetScenarioSpec: unknown geometry "
+                             f"{self.geometry!r} (expected 'toy' or "
+                             f"'orbital')")
+        if self.n_sats < 1 or self.n_rounds < 1:
+            raise ValueError(f"FleetScenarioSpec: need n_sats >= 1 and "
+                             f"n_rounds >= 1, got {self.n_sats}/"
+                             f"{self.n_rounds}")
+        if not self.stations:
+            raise ValueError("FleetScenarioSpec: stations must be non-empty "
+                             "(a fleet with no ground segment can never "
+                             "downlink)")
+        if not 0.0 <= self.eclipse_fraction < 1.0:
+            raise ValueError(f"FleetScenarioSpec: eclipse_fraction "
+                             f"{self.eclipse_fraction} outside [0, 1)")
+        if self.orbit_rounds < 1:
+            raise ValueError(f"FleetScenarioSpec: orbit_rounds must be >= 1, "
+                             f"got {self.orbit_rounds}")
+        if self.pass_s <= 0.0 or self.harvest_w <= 0.0:
+            raise ValueError(f"FleetScenarioSpec: pass_s and harvest_w must "
+                             f"be positive, got {self.pass_s}/"
+                             f"{self.harvest_w}")
+        lo, hi = self.elevation_range
+        if not 0.0 <= lo <= hi <= 1.0:
+            raise ValueError(f"FleetScenarioSpec: elevation_range "
+                             f"({lo}, {hi}) must satisfy 0 <= lo <= hi <= 1 "
+                             f"(it is a bandwidth factor range)")
+        if self.alt_km <= 0.0 or self.time_step_s <= 0.0:
+            raise ValueError(f"FleetScenarioSpec: alt_km and time_step_s "
+                             f"must be positive, got {self.alt_km}/"
+                             f"{self.time_step_s}")
+        if not 0.0 <= self.min_elev_deg < 90.0:
+            raise ValueError(f"FleetScenarioSpec: min_elev_deg "
+                             f"{self.min_elev_deg} outside [0, 90)")
+        if self.n_planes < 0:
+            raise ValueError(f"FleetScenarioSpec: n_planes must be >= 0 "
+                             f"(0 = auto), got {self.n_planes}")
 
     def fault_plan(self, seed: Optional[int] = None, **knobs):
         """Fault-bearing rounds for this scenario: a deterministic
@@ -130,6 +185,24 @@ class FleetScenario:
         return sum(len(p.frames) for r in self.rounds for p in r.passes)
 
 
+def elevation_bandwidth(elev_deg: float, station: GroundStation, *,
+                        factor: Optional[float] = None) -> float:
+    """Elevation-dependent effective bandwidth (Mbps) for one window.
+
+    The ONE scaling rule both geometry paths share: effective bandwidth
+    is the station bandwidth times a factor in [0, 1]. The orbital path
+    passes a real elevation (degrees), mapped through ``sin`` — the
+    slant-range/air-mass shape that makes horizon grazes slow and
+    overhead passes full-rate. The toy path draws its factor directly
+    from ``elevation_range`` and passes it via ``factor``; the clamp is
+    an exact no-op on [0, 1], keeping the toy path bit-identical to the
+    pre-helper inline scaling.
+    """
+    if factor is None:
+        factor = float(np.sin(np.radians(np.clip(elev_deg, 0.0, 90.0))))
+    return station.bandwidth_mbps * min(max(float(factor), 0.0), 1.0)
+
+
 def orbit_phase(spec: FleetScenarioSpec, rnd: int, sat: int) -> float:
     """[0, 1) orbital phase: satellites are phase-staggered along the
     ring; phase advances by 1/orbit_rounds per round."""
@@ -158,7 +231,14 @@ def generate_scenario(spec: FleetScenarioSpec) -> FleetScenario:
     Scene content is drawn per satellite from independent seeded
     generators, so two scenarios with the same seed are byte-identical
     regardless of consumption order.
+
+    ``geometry="orbital"`` routes through the orbital geometry engine
+    (lazy import — :mod:`repro.orbits` depends on this module); the
+    default toy path below is bit-identical to its pre-geometry form.
     """
+    if spec.geometry == "orbital":
+        from repro.orbits.schedule import generate_orbital_scenario
+        return generate_orbital_scenario(spec)
     rngs = [np.random.default_rng(10_000 * spec.seed + s)
             for s in range(spec.n_sats)]
     contact_rng = np.random.default_rng(10_000 * spec.seed + 9999)
@@ -176,7 +256,7 @@ def generate_scenario(spec: FleetScenarioSpec) -> FleetScenario:
             sat = (r * len(spec.stations) + k) % spec.n_sats
             lo, hi = spec.elevation_range
             elev = float(contact_rng.uniform(lo, hi))
-            bw = station.bandwidth_mbps * elev
+            bw = elevation_bandwidth(0.0, station, factor=elev)
             budget = (contact_budget_bytes(bw, station.contact_s)
                       * spec.window_budget_scale)
             rnd.contacts.append(ContactEvent(sat=sat, station=station,

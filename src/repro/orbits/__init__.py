@@ -1,0 +1,34 @@
+"""Catalog-scale orbital geometry engine.
+
+JAX-native batched orbital mechanics for constellation scenarios: stacked
+Keplerian element arrays (:mod:`repro.orbits.elements`), a jitted/vmapped
+propagator mapping ``(n_sats,)`` elements x ``(n_times,)`` time grids to
+ECI position batches in one fused program
+(:mod:`repro.orbits.propagation`), ground-station elevation masks with
+vectorized pass extraction and cylindrical Earth-shadow eclipse modeling
+(:mod:`repro.orbits.visibility`), and the scenario bridge turning passes
+and eclipse fractions into :class:`~repro.data.scenarios.ContactEvent`
+streams and harvest energy grants (:mod:`repro.orbits.schedule`).
+
+``FleetScenarioSpec(geometry="orbital")`` routes
+:func:`repro.data.scenarios.generate_scenario` through this subsystem;
+``geometry="toy"`` (the default) keeps the bit-equal phase-offset model.
+"""
+from repro.orbits.elements import OrbitalElements, shell, walker_delta
+from repro.orbits.propagation import (MU_EARTH_M3_S2, OMEGA_EARTH_RAD_S,
+                                      R_EARTH_M, orbital_period_s,
+                                      propagate)
+from repro.orbits.schedule import (default_sites, generate_orbital_scenario,
+                                   pass_contacts)
+from repro.orbits.visibility import (PassSet, eclipse_fractions, eclipse_mask,
+                                     elevation_deg, extract_passes,
+                                     station_ecef, sun_direction)
+
+__all__ = [
+    "OrbitalElements", "walker_delta", "shell",
+    "propagate", "orbital_period_s",
+    "MU_EARTH_M3_S2", "R_EARTH_M", "OMEGA_EARTH_RAD_S",
+    "station_ecef", "elevation_deg", "extract_passes", "PassSet",
+    "sun_direction", "eclipse_mask", "eclipse_fractions",
+    "pass_contacts", "generate_orbital_scenario", "default_sites",
+]

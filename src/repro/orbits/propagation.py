@@ -1,0 +1,122 @@
+"""Batched Keplerian propagation: element arrays x a time grid -> ECI
+positions in ONE fused jitted program.
+
+The throughput bar (ROADMAP / OrbVeil's VALIDATION.md) is the full
+~14k-object CelesTrak catalog per batch in tens of milliseconds. The
+whole propagation — mean anomaly advance, a fixed-iteration Newton
+solve of Kepler's equation, perifocal coordinates, and the
+RAAN/inclination/argument-of-perigee rotation — is elementwise over the
+``(n_sats, n_times)`` grid, so it compiles to one XLA program with no
+host round-trips and no per-satellite dispatch;
+``benchmarks/orbits_bench.py`` gates sats x steps throughput on it.
+
+Two deliberate modeling choices, shared with the rest of the subsystem:
+
+* **Two-body only** — no J2/drag. Scenario horizons here are hours, over
+  which two-body error is far below the scenario generator's time-grid
+  quantization; secular perturbations matter for weeks-long screening,
+  not for contact-window synthesis.
+* **Fixed-iteration Kepler** — ``KEPLER_ITERS`` Newton steps instead of
+  a convergence loop, so the program is shape-stable and branch-free
+  (vmappable, shardable). For the eccentricity cap enforced by
+  :mod:`repro.orbits.elements` (< 0.25), 8 Newton steps land at
+  round-off of whatever dtype jax runs in — float32 by default in this
+  repo, i.e. meter-level LEO positions, far below the scenario
+  generator's time-grid quantization (with ``jax_enable_x64`` the same
+  program is float64 end to end).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["MU_EARTH_M3_S2", "R_EARTH_M", "OMEGA_EARTH_RAD_S",
+           "KEPLER_ITERS", "orbital_period_s", "propagate",
+           "propagate_jit", "gmst_rad", "eci_to_ecef"]
+
+MU_EARTH_M3_S2 = 3.986004418e14   # standard gravitational parameter
+R_EARTH_M = 6_371_000.0           # mean (spherical-model) Earth radius
+OMEGA_EARTH_RAD_S = 7.2921159e-5  # sidereal rotation rate
+KEPLER_ITERS = 8                  # fixed Newton steps (see module docstring)
+
+
+def orbital_period_s(a_m) -> np.ndarray:
+    """Keplerian period T = 2 pi sqrt(a^3 / mu)."""
+    a = np.asarray(a_m, np.float64)
+    return 2.0 * np.pi * np.sqrt(a ** 3 / MU_EARTH_M3_S2)
+
+
+def _kepler(mean_anom, ecc):
+    """Eccentric anomaly from mean anomaly: ``KEPLER_ITERS`` Newton
+    steps on ``E - e sin E = M`` (branch-free; exact pass-through at
+    e = 0 where E = M after the first step)."""
+    E = mean_anom
+    for _ in range(KEPLER_ITERS):
+        E = E - (E - ecc * jnp.sin(E) - mean_anom) / (1.0 - ecc * jnp.cos(E))
+    return E
+
+
+def _propagate(a, ecc, inc, raan, argp, m0, times_s):
+    """(n_sats,) elements x (n_times,) seconds -> (n_sats, n_times, 3)
+    ECI positions in meters. Pure jnp; jit/vmap/shard-safe."""
+    n = jnp.sqrt(MU_EARTH_M3_S2 / a ** 3)                  # (S,)
+    M = m0[:, None] + n[:, None] * times_s[None, :]        # (S, T)
+    e = ecc[:, None]
+    E = _kepler(M, e)
+    cosE, sinE = jnp.cos(E), jnp.sin(E)
+    # perifocal coordinates (z = 0)
+    b_over_a = jnp.sqrt(1.0 - e * e)
+    xp = a[:, None] * (cosE - e)
+    yp = a[:, None] * b_over_a * sinE
+    # perifocal -> ECI: R3(-raan) R1(-inc) R3(-argp); expanded to the
+    # two basis columns so the whole rotation is 6 fused multiplies
+    cO, sO = jnp.cos(raan)[:, None], jnp.sin(raan)[:, None]
+    ci, si = jnp.cos(inc)[:, None], jnp.sin(inc)[:, None]
+    cw, sw = jnp.cos(argp)[:, None], jnp.sin(argp)[:, None]
+    px = cO * cw - sO * sw * ci
+    py = sO * cw + cO * sw * ci
+    pz = sw * si
+    qx = -cO * sw - sO * cw * ci
+    qy = -sO * sw + cO * cw * ci
+    qz = cw * si
+    return jnp.stack([xp * px + yp * qx,
+                      xp * py + yp * qy,
+                      xp * pz + yp * qz], axis=-1)         # (S, T, 3)
+
+
+propagate_jit = jax.jit(_propagate)
+
+
+def propagate(elements, times_s):
+    """Batch-propagate a catalog over a time grid.
+
+    ``elements``: :class:`~repro.orbits.elements.OrbitalElements`
+    (``n_sats`` stacked element arrays); ``times_s``: ``(n_times,)``
+    seconds past epoch. Returns ``(n_sats, n_times, 3)`` ECI positions
+    (meters) as a device array from one jitted program — the compiled
+    program is reused across catalogs of the same ``(n_sats, n_times)``
+    shape.
+    """
+    times = jnp.asarray(np.asarray(times_s, np.float64))
+    return propagate_jit(*[jnp.asarray(v) for v in elements.arrays()],
+                         times)
+
+
+def gmst_rad(times_s, gmst0_rad: float = 0.0):
+    """Greenwich mean sidereal angle over the grid (linear model —
+    scenario epochs are arbitrary, so a rate-accurate angle is all the
+    geometry needs)."""
+    return gmst0_rad + OMEGA_EARTH_RAD_S * jnp.asarray(times_s)
+
+
+@partial(jax.jit, static_argnames=())
+def eci_to_ecef(pos_eci, times_s, gmst0_rad: float = 0.0):
+    """Rotate ``(..., n_times, 3)`` ECI positions into the rotating
+    Earth-fixed frame (R3 by the sidereal angle)."""
+    g = gmst_rad(times_s, gmst0_rad)
+    cg, sg = jnp.cos(g), jnp.sin(g)
+    x, y, z = pos_eci[..., 0], pos_eci[..., 1], pos_eci[..., 2]
+    return jnp.stack([cg * x + sg * y, -sg * x + cg * y, z], axis=-1)

@@ -1,0 +1,220 @@
+"""Ground-station visibility and eclipse geometry over propagated
+position batches.
+
+Three layers, matching how the scenario bridge consumes them:
+
+* **Elevation series** — ground stations become ECEF vectors
+  (:func:`station_ecef`, spherical Earth — consistent with the
+  propagator's mean-radius shadow model), get rotated through the
+  sidereal angle into ECI per time step, and the whole
+  ``(n_stations, n_sats, n_times)`` elevation grid comes out of one
+  jitted program (:func:`elevation_deg`).
+
+* **Pass extraction** — thresholding the elevation grid at a minimum
+  elevation gives visibility masks; :func:`extract_passes` turns every
+  row's mask into contact passes via SEGMENT SCANS (padded diff for
+  rise/set edges, cumulative pass ids, ``ufunc.at`` reductions for
+  per-pass max elevation and culmination) — no Python loop over rows or
+  passes, so a full catalog x station-network grid extracts in one
+  shot. Each pass is a maximal contiguous above-mask run: start/end
+  indices, rise/set/culmination times, duration, max elevation.
+
+* **Eclipse** — the cylindrical Earth-shadow test of the
+  energy-harvest literature (arXiv 2111.09045): a satellite is
+  eclipsed iff it sits behind the terminator plane (anti-sun side) AND
+  inside the shadow cylinder of radius ``R_EARTH``
+  (:func:`eclipse_mask`, with a circular-ecliptic sun from
+  :func:`sun_direction`); :func:`eclipse_fractions` folds the mask
+  into per-window shadow fractions that the scenario bridge turns into
+  harvest energy grants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orbits.propagation import OMEGA_EARTH_RAD_S, R_EARTH_M
+
+__all__ = ["station_ecef", "elevation_deg", "extract_passes", "PassSet",
+           "sun_direction", "eclipse_mask", "eclipse_fractions",
+           "YEAR_S", "OBLIQUITY_RAD"]
+
+YEAR_S = 365.25 * 86_400.0
+OBLIQUITY_RAD = float(np.radians(23.439))
+
+
+def station_ecef(lat_deg: float, lon_deg: float,
+                 alt_m: float = 0.0) -> np.ndarray:
+    """Geodetic site -> ECEF vector (m), spherical Earth model."""
+    lat, lon = np.radians(float(lat_deg)), np.radians(float(lon_deg))
+    r = R_EARTH_M + float(alt_m)
+    return np.array([r * np.cos(lat) * np.cos(lon),
+                     r * np.cos(lat) * np.sin(lon),
+                     r * np.sin(lat)], np.float64)
+
+
+def _elevation(pos_eci, times_s, stations_ecef, gmst0, omega):
+    """(S, T, 3) positions x (N, 3) stations -> (N, S, T) elevation
+    (degrees). Stations rotate into ECI by the sidereal angle (R3 of
+    -theta applied to the ECEF site), which avoids rotating the much
+    larger satellite batch."""
+    g = gmst0 + omega * times_s                            # (T,)
+    cg, sg = jnp.cos(g), jnp.sin(g)
+    sx, sy, sz = (stations_ecef[:, 0][:, None],
+                  stations_ecef[:, 1][:, None],
+                  stations_ecef[:, 2][:, None])            # (N, 1)
+    st = jnp.stack([cg[None, :] * sx - sg[None, :] * sy,
+                    sg[None, :] * sx + cg[None, :] * sy,
+                    jnp.broadcast_to(sz, sx.shape[:1] + g.shape)],
+                   axis=-1)                                # (N, T, 3)
+    up = st / jnp.linalg.norm(st, axis=-1, keepdims=True)
+    d = pos_eci[None, :, :, :] - st[:, None, :, :]         # (N, S, T, 3)
+    sin_el = (jnp.sum(d * up[:, None, :, :], axis=-1)
+              / jnp.linalg.norm(d, axis=-1))
+    return jnp.degrees(jnp.arcsin(jnp.clip(sin_el, -1.0, 1.0)))
+
+
+_elevation_jit = jax.jit(_elevation)
+
+
+def elevation_deg(pos_eci, times_s, stations_ecef, gmst0_rad: float = 0.0,
+                  omega_rad_s: float = OMEGA_EARTH_RAD_S):
+    """Elevation grid ``(n_stations, n_sats, n_times)`` in degrees, one
+    jitted program. ``omega_rad_s=0.0`` freezes Earth rotation (the
+    symmetry oracle used by the property tests)."""
+    return _elevation_jit(
+        jnp.asarray(pos_eci), jnp.asarray(np.asarray(times_s, np.float64)),
+        jnp.asarray(np.atleast_2d(np.asarray(stations_ecef, np.float64))),
+        float(gmst0_rad), float(omega_rad_s))
+
+
+@dataclass(frozen=True)
+class PassSet:
+    """Extracted contact passes over flattened elevation rows.
+
+    ``row[p]`` indexes the flattened leading axes of the elevation grid
+    the passes came from (unravel with ``np.unravel_index(row,
+    grid.shape[:-1])`` to recover (station, sat)); ``start``/``stop``
+    are the [inclusive, exclusive) time-grid indices of the maximal
+    above-mask run. Times are seconds on the caller's grid;
+    ``duration_s`` counts each above-mask sample at its grid step, so a
+    single-sample grazing pass still carries one step of contact time.
+    """
+
+    row: np.ndarray          # (n_passes,) int64
+    start: np.ndarray        # (n_passes,) int64, inclusive
+    stop: np.ndarray         # (n_passes,) int64, exclusive
+    t_rise: np.ndarray       # (n_passes,) f64 seconds
+    t_set: np.ndarray        # (n_passes,) f64 seconds (last sample)
+    duration_s: np.ndarray   # (n_passes,) f64
+    max_elev_deg: np.ndarray  # (n_passes,) f64
+    t_culminate: np.ndarray  # (n_passes,) f64 seconds (first max sample)
+
+    @property
+    def n_passes(self) -> int:
+        return int(self.row.shape[0])
+
+
+def extract_passes(elev_deg, times_s, min_elev_deg: float) -> PassSet:
+    """Vectorized pass extraction over ``(..., n_times)`` elevation rows.
+
+    Pure segment scans — a zero-padded ``diff`` finds every rise/set
+    edge at once, a cumulative count of rise edges labels each
+    above-mask sample with its pass id, and ``np.maximum.at`` /
+    ``np.minimum.at`` reduce per-pass max elevation and culmination —
+    so the cost is O(rows x times) regardless of how many passes there
+    are, with no Python loop over either.
+    """
+    elev = np.asarray(elev_deg, np.float64)
+    times = np.asarray(times_s, np.float64)
+    T = elev.shape[-1]
+    if times.shape != (T,):
+        raise ValueError(f"extract_passes: {times.shape[0] if times.ndim else 0}"
+                         f"-point time grid for {T}-sample elevation rows")
+    rows = elev.reshape(-1, T)
+    mask = rows >= float(min_elev_deg)
+
+    padded = np.zeros((rows.shape[0], T + 2), np.int8)
+    padded[:, 1:-1] = mask
+    edges = np.diff(padded, axis=1)            # (R, T+1): +1 rise, -1 set
+    r_rise, t_rise_i = np.nonzero(edges == 1)  # row-major -> passes pair up
+    r_set, t_set_i = np.nonzero(edges == -1)   # t_set_i is EXCLUSIVE stop
+    n = r_rise.shape[0]
+    assert r_set.shape[0] == n and (r_rise == r_set).all()
+
+    # per-sample pass ids: cumulative rise count over the flat grid
+    marks = np.zeros((rows.shape[0], T), bool)
+    marks[r_rise, t_rise_i] = True
+    pid = np.cumsum(marks.ravel()) - 1
+    fm = mask.ravel()
+    pid_m, val_m = pid[fm], rows.ravel()[fm]
+
+    max_elev = np.full(n, -np.inf)
+    np.maximum.at(max_elev, pid_m, val_m)
+    # culmination = FIRST sample attaining the pass max
+    flat_idx = np.flatnonzero(fm)
+    at_max = val_m == max_elev[pid_m]
+    culm_flat = np.full(n, rows.size, np.int64)
+    np.minimum.at(culm_flat, pid_m[at_max], flat_idx[at_max])
+    culm_t = culm_flat % T
+
+    # duration: each sample counts one grid step (last step extrapolated)
+    if T > 1:
+        steps = np.append(np.diff(times), times[-1] - times[-2])
+    else:
+        steps = np.zeros(1)
+    edges_t = np.append(times, times[-1] + steps[-1])
+    return PassSet(
+        row=r_rise.astype(np.int64),
+        start=t_rise_i.astype(np.int64),
+        stop=t_set_i.astype(np.int64),
+        t_rise=times[t_rise_i],
+        t_set=times[t_set_i - 1],
+        duration_s=edges_t[t_set_i] - times[t_rise_i],
+        max_elev_deg=max_elev,
+        t_culminate=times[culm_t] if n else np.zeros(0))
+
+
+def sun_direction(times_s, sun_lon0_rad: float = 0.0):
+    """(n_times, 3) unit sun direction: circular ecliptic model (mean
+    motion over :data:`YEAR_S`, obliquity tilt) — plenty for shadow
+    geometry whose epoch is arbitrary anyway."""
+    t = jnp.asarray(np.asarray(times_s, np.float64))
+    lam = sun_lon0_rad + 2.0 * jnp.pi * t / YEAR_S
+    ce, se = np.cos(OBLIQUITY_RAD), np.sin(OBLIQUITY_RAD)
+    return jnp.stack([jnp.cos(lam), jnp.sin(lam) * ce, jnp.sin(lam) * se],
+                     axis=-1)
+
+
+def _eclipse(pos_eci, sun_dir):
+    proj = jnp.sum(pos_eci * sun_dir[None, :, :], axis=-1)   # (S, T)
+    rho2 = jnp.sum(pos_eci * pos_eci, axis=-1) - proj * proj
+    return (proj < 0.0) & (rho2 < R_EARTH_M * R_EARTH_M)
+
+
+_eclipse_jit = jax.jit(_eclipse)
+
+
+def eclipse_mask(pos_eci, sun_dir):
+    """Cylindrical Earth-shadow test: ``(n_sats, n_times)`` True where
+    the satellite is behind the terminator plane AND inside the shadow
+    cylinder of radius ``R_EARTH`` around the anti-sun axis."""
+    return _eclipse_jit(jnp.asarray(pos_eci), jnp.asarray(sun_dir))
+
+
+def eclipse_fractions(mask, bounds) -> np.ndarray:
+    """Fold an eclipse mask into per-window shadow fractions.
+
+    ``bounds``: ``(n_windows + 1,)`` time-grid indices (window ``w`` is
+    ``[bounds[w], bounds[w+1])``). Returns ``(n_sats, n_windows)``
+    fractions in [0, 1]; an empty window is fully sunlit (0.0).
+    """
+    m = np.asarray(mask, np.float64)
+    bounds = np.asarray(bounds, np.int64)
+    sums = np.concatenate([np.zeros((m.shape[0], 1)), np.cumsum(m, axis=1)],
+                          axis=1)
+    width = np.maximum(np.diff(bounds), 1)[None, :]
+    return (sums[:, bounds[1:]] - sums[:, bounds[:-1]]) / width

@@ -114,3 +114,40 @@ def test_golden_contact_plan_round(counters, request):
     }
     _check_golden(got, os.path.join(GOLDEN_DIR, "contact_plan_fleet.json"),
                   request, "contact_plan_fleet")
+
+
+def test_golden_orbital_scenario(request):
+    """Pins the orbital geometry engine end to end: Walker-delta
+    construction, batched propagation, the elevation grid, segment-scan
+    pass extraction, eclipse fractions, and the pass->contact pricing
+    bridge, as the concrete per-round event stream of one fixed-seed
+    ``geometry="orbital"`` scenario. Numeric drift anywhere in the
+    subsystem (or in the shared elevation_bandwidth rule) fails here.
+
+    Frames are pinned by count only — their content comes from the same
+    seeded generators the toy path uses, which the per-policy summary
+    goldens already cover."""
+    from repro.data.scenarios import (FleetScenarioSpec, GroundStation,
+                                      generate_scenario)
+    from repro.orbits import default_sites
+
+    sites = default_sites(4)
+    sc = generate_scenario(FleetScenarioSpec(
+        n_sats=4, n_rounds=3, frames_per_pass=1,
+        stations=tuple(GroundStation(f"gs{k}", site=sites[k])
+                       for k in range(4)),
+        scene_mix=(SPEC,), seed=5, geometry="orbital", min_elev_deg=5.0))
+    got = {
+        "n_frames": sc.n_frames,
+        "rounds": [{
+            "harvest_j": [p.harvest_j for p in r.passes],
+            "sunlit": [p.sunlit for p in r.passes],
+            "contacts": [{
+                "sat": c.sat, "station": c.station.name,
+                "bandwidth_mbps": c.bandwidth_mbps,
+                "budget_bytes": c.budget_bytes,
+            } for c in r.contacts],
+        } for r in sc.rounds],
+    }
+    _check_golden(got, os.path.join(GOLDEN_DIR, "orbital_scenario.json"),
+                  request, "orbital_scenario")
