@@ -37,6 +37,17 @@ arm hides >= 50% of recount wall time behind foreground work
 (``recount_hidden_frac`` = 1 - sync-wait / recount); and all three
 arms' per-tile predictions/summaries agree at 0.0 deviation.
 
+**Depth sweep** — the bounded recount pipeline: the stations-sweep
+scenario executed at every ``FLEET_BENCH_DEPTHS`` pipeline depth
+(default 0/1/2 — synchronous, the single-slot overlap, and two rounds
+in flight with backpressure). Per-depth contact wall and recount
+accounting (``recount_s`` / ``recount_wait_s`` / ``hidden_frac``, best
+across interleaved iterations), the ``wait_s <= recount_s`` accounting
+invariant asserted per arm, a 0.0-deviation parity gate across ALL
+depths (always enforced), and the depth-scaling gate — depth 2 hides at
+least the recount fraction depth 1 hides (full-size sweeps on
+>= ``PERF_GATES_MIN_CORES``-core boxes only, recorded always).
+
 **Devices sweep** — the same fixed-size scenario (``FLEET_BENCH_SHARD_SATS``,
 default 8 satellites) executed by the sharded fleet runtime at 1/2/4
 devices (``FLEET_BENCH_DEVICES``). Each device count runs in a fresh
@@ -92,6 +103,7 @@ import time
 JSON_PATH = "BENCH_fleet.json"
 DEFAULT_SATS = (2, 8, 32)
 DEFAULT_DEVICES = (1, 2, 4)
+DEFAULT_DEPTHS = (0, 1, 2)
 DEFAULT_FAULT_RATES = (0.0, 0.05, 0.10, 0.25)
 SHARD_PARITY_TOL = 0.0  # documented dedup tolerance: bit-equal on CPU
 SPEEDUP_GATE = 1.25     # fleet vs loop at 8 sats (see module docstring)
@@ -229,6 +241,83 @@ def _stations_sweep(rows, report):
                  sb["contact_s"] * 1e6,
                  f"speedup={speedup:.2f}x hidden={hidden:.2f} "
                  f"wps={sb['windows_per_s']:.1f} dev={max_dev:.1e}"))
+    return row
+
+
+def _depth_sweep(rows, report):
+    """Bounded recount-pipeline depth sweep (``FLEET_BENCH_DEPTHS``,
+    default 0,1,2) over the stations-sweep scenario: per-depth contact
+    wall and recount accounting, a 0.0-deviation parity gate across
+    every depth, the ``wait_s <= recount_s`` accounting invariant per
+    arm, and the depth-scaling gate — depth 2 must hide at least the
+    recount fraction depth 1 hides (full-size sweeps on
+    >= ``PERF_GATES_MIN_CORES``-core boxes only; recorded always).
+    Hidden fractions are the best (max) across iterations, matching the
+    best-wall convention of the other arms."""
+    import numpy as np
+
+    from benchmarks.common import counters
+    from repro.core.fleet import run_scenario
+    from repro.core.pipeline import PipelineConfig
+    from repro.data.scenarios import generate_scenario
+
+    depths = tuple(_ints_from_env("FLEET_BENCH_DEPTHS", DEFAULT_DEPTHS))
+    n_stations = int(os.environ.get("FLEET_BENCH_STATIONS", "8"))
+    n_sats = int(os.environ.get("FLEET_BENCH_CONTACT_SATS", "32"))
+    if not depths or n_stations <= 0:
+        return None
+    n_rounds, iters, _ = _bench_knobs()
+    space, ground = counters()
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    sc = generate_scenario(_contact_spec(n_sats, n_stations, seed=6))
+
+    def arm(depth):
+        return run_scenario(space, ground, pcfg, sc, fleet=True,
+                            async_depth=depth)
+
+    for d in depths:
+        arm(d)  # warm: compiles land untimed
+    best, hidden, res_by = {}, {}, {}
+    for _ in range(iters):
+        for d in depths:  # interleaved: drift hits all depths evenly
+            res, fl = arm(d)
+            s = fl.summary()
+            assert s["recount_wait_s"] <= s["recount_s"], (
+                f"depth={d}: wait_s={s['recount_wait_s']} > "
+                f"recount_s={s['recount_s']}")
+            if d not in best or s["contact_s"] < best[d]["contact_s"]:
+                best[d] = s
+            hidden[d] = max(hidden.get(d, 0.0), s["recount_hidden_frac"])
+            res_by[d] = res
+
+    max_dev = 0.0
+    base = res_by[depths[0]]
+    for d in depths[1:]:
+        for a, b in zip(base, res_by[d]):
+            if a.per_tile_pred.size:
+                max_dev = max(max_dev, float(np.max(np.abs(
+                    a.per_tile_pred - b.per_tile_pred))))
+            assert a.summary() == b.summary(), \
+                f"depth sweep: depth={d} summary mismatch vs depth={depths[0]}"
+    row = {
+        "n_sats": n_sats, "stations": n_stations, "rounds": n_rounds,
+        "depths": list(depths),
+        "pred_max_dev": max_dev,
+        "full_size": n_sats >= 32 and n_stations >= 8,
+        "per_depth": {
+            str(d): {
+                "contact_s": best[d]["contact_s"],
+                "recount_s": best[d]["recount_s"],
+                "recount_wait_s": best[d]["recount_wait_s"],
+                "hidden_frac": hidden[d],
+                "max_in_flight": best[d]["recount_max_in_flight"],
+            } for d in depths},
+    }
+    report["depth_sweep"] = row
+    frac = " ".join(f"d{d}={hidden[d]:.2f}" for d in depths)
+    rows.append(("depth_sweep",
+                 best[depths[-1]]["contact_s"] * 1e6,
+                 f"hidden: {frac} dev={max_dev:.1e}"))
     return row
 
 
@@ -649,6 +738,7 @@ def run(json_path: str = None):
     rows, report = [], {}
     _size_sweep(rows, report)
     contact = _stations_sweep(rows, report)
+    depth = _depth_sweep(rows, report)
     orbital = _orbital_sweep(rows, report)
     faults = _faults_sweep(rows, report)
     shard_dev = _devices_sweep(rows, report)
@@ -684,6 +774,16 @@ def run(json_path: str = None):
         "gate_async_hidden": (
             contact["async_recount_hidden_frac"] >= ASYNC_HIDE_GATE
             if contact and contact["full_size"] and perf_on else None),
+        "depth_pred_max_dev": depth["pred_max_dev"] if depth else None,
+        "depth_hidden_fracs": (
+            {d: v["hidden_frac"] for d, v in depth["per_depth"].items()}
+            if depth else None),
+        "gate_depth2_hidden_ge_depth1": (
+            depth["per_depth"]["2"]["hidden_frac"]
+            >= depth["per_depth"]["1"]["hidden_frac"]
+            if depth and "1" in depth["per_depth"]
+            and "2" in depth["per_depth"]
+            and depth["full_size"] and perf_on else None),
         "fault_none_plan_overhead": (faults["none_plan_overhead"]
                                      if faults else None),
         "fault_overhead_gate": FAULT_OVERHEAD_GATE,
@@ -740,6 +840,17 @@ def run(json_path: str = None):
             f"async overlap gate: hidden fraction "
             f"{contact['async_recount_hidden_frac']:.2f} < "
             f"{ASYNC_HIDE_GATE} of recount wall time (see {json_path})")
+    if depth and depth["pred_max_dev"] > CONTACT_PARITY_TOL:
+        raise AssertionError(
+            f"depth-sweep parity gate: pred_max_dev="
+            f"{depth['pred_max_dev']:.3e} exceeds {CONTACT_PARITY_TOL} "
+            f"across pipeline depths {depth['depths']} (see {json_path})")
+    if report["_summary"]["gate_depth2_hidden_ge_depth1"] is False:
+        raise AssertionError(
+            f"depth-scaling gate: depth-2 hidden fraction "
+            f"{depth['per_depth']['2']['hidden_frac']:.2f} < depth-1's "
+            f"{depth['per_depth']['1']['hidden_frac']:.2f} "
+            f"(see {json_path})")
     if faults:
         if faults["watchdog_pred_max_dev"] > 0.0:
             raise AssertionError(

@@ -11,7 +11,9 @@ Contact rounds execute as declarative ContactPlans: each scenario
 round's contact events become one lane-stacked plan
 (``Round.contact_plan``) that the batched ground-segment core drains —
 no per-window host loop. ``--async-ground`` additionally overlaps each
-round's batched ground recount with the next round's ingest dispatch.
+round's batched ground recount with the next round's ingest dispatch;
+``--async-depth K`` deepens that overlap into a bounded pipeline that
+keeps up to K rounds' recounts in flight (exact at every depth).
 
 ``--oracle`` runs the same scenario through the looped sequential
 per-Mission path (the parity oracle the fleet is exact-equal to);
@@ -78,7 +80,13 @@ def main():
                     help="run BOTH paths and assert exact parity")
     ap.add_argument("--async-ground", action="store_true",
                     help="overlap each round's batched ground recount "
-                         "with the next round's ingest (exact either way)")
+                         "with the next round's ingest (exact either way; "
+                         "shorthand for --async-depth 1)")
+    ap.add_argument("--async-depth", type=int, default=None, metavar="K",
+                    help="bounded ground-recount pipeline depth: keep up "
+                         "to K rounds' recounts in flight behind later "
+                         "rounds' ingest (0 = synchronous; exact at "
+                         "every depth)")
     ap.add_argument("--faults", type=int, default=None, metavar="SEED",
                     help="inject a deterministic fault schedule drawn "
                          "from this seed (drops, outages, truncations, "
@@ -146,6 +154,7 @@ def main():
     results, driver = run_scenario(space, ground, pcfg, scenario,
                                    fleet=not args.oracle, mesh=mesh,
                                    async_ground=args.async_ground,
+                                   async_depth=args.async_depth,
                                    faults=faults)
     if args.check:
         if faults is not None:
@@ -217,7 +226,9 @@ def main():
         print(f"ground segment: {s['windows_served']} windows in "
               f"{s['contact_s']:.2f}s ({s['windows_per_s']:.1f} windows/s, "
               f"{s['bytes_downlinked_per_s'] / 1e6:.1f} MB/s downlinked)"
-              + (f"; async recount {s['recount_s']:.2f}s, "
+              + (f"; depth-{s['async_depth']} recount pipeline "
+                 f"({s['recount_max_in_flight']} rounds in flight peak): "
+                 f"{s['recount_s']:.2f}s recounted, "
                  f"{s['recount_hidden_frac']:.0%} hidden behind ingest"
                  if s["async_ground"] else ""))
     assert agg_bytes <= agg_budget + 1e-6, "byte overdraw"

@@ -8,8 +8,9 @@ stream — ``ContactPlan.rotating`` carrying its pointer across passes —
 feeds ``Fleet.contact_round(plan=...)``, so every window goes through
 the batched lane-stacked planner (no legacy per-window rotation calls).
 ``--overlap`` defers each pass's ground recount to a worker thread that
-hides behind the next pass's ingest (bit-identical results; the final
-``finalize()`` syncs).
+hides behind the next pass's ingest; ``--depth K`` keeps up to K
+passes' recounts in flight as a bounded pipeline (bit-identical results
+either way; the final ``finalize()`` syncs).
 
   PYTHONPATH=src python examples/serve_collaborative.py [--passes 3]
 """
@@ -36,8 +37,13 @@ def main():
     ap.add_argument("--deadline-s", type=float, default=120.0)
     ap.add_argument("--overlap", action="store_true",
                     help="overlap each pass's ground recount with the "
-                         "next pass's ingest (async ground segment)")
+                         "next pass's ingest (async ground segment; "
+                         "shorthand for --depth 1)")
+    ap.add_argument("--depth", type=int, default=None, metavar="K",
+                    help="bounded recount pipeline depth: up to K passes' "
+                         "recounts in flight (0 = synchronous)")
     args = ap.parse_args()
+    overlapped = bool(args.overlap or args.depth)
 
     space, ground = get_counters()
     rng = np.random.default_rng(7)
@@ -49,7 +55,8 @@ def main():
     fleet = Fleet(space, ground,
                   PipelineConfig(method="targetfuse", score_thresh=0.25,
                                  bandwidth_mbps=args.bandwidth),
-                  n_sats=1, async_ground=args.overlap)
+                  n_sats=1, async_ground=args.overlap,
+                  async_depth=args.depth)
     station = {"ptr": 0}  # the persistent plan stream's rotation pointer
 
     def one_pass(i):
@@ -67,7 +74,7 @@ def main():
         return win
 
     print(f"== collaborative serving: {args.passes} orbital passes "
-          f"({'overlapped' if args.overlap else 'synchronous'} ground "
+          f"({'overlapped' if overlapped else 'synchronous'} ground "
           f"recount) ==")
     _, dropped = batcher.run(range(args.passes), one_pass)
     if dropped:
@@ -83,8 +90,9 @@ def main():
           f"of {r.bytes_budget / 1e6:.2f}MB")
     print(f"ground segment: {s['windows_served']} windows, "
           f"{s['windows_per_s']:.1f} windows/s"
-          + (f", recount {s['recount_hidden_frac']:.0%} hidden"
-             if args.overlap else ""))
+          + (f", depth-{s['async_depth']} recount pipeline, "
+             f"{s['recount_hidden_frac']:.0%} hidden"
+             if overlapped else ""))
 
 
 if __name__ == "__main__":

@@ -34,6 +34,11 @@ echo "   scenario-driven ContactPlans + overlapped ground recount) =="
 timeout 600 python examples/constellation_sim.py --sats 2 --rounds 2 --check \
   --async-ground
 
+echo "== example smoke: depth-2 recount pipeline (two rounds in flight,"
+echo "   parity-checked against the synchronous path) =="
+timeout 600 python examples/constellation_sim.py --sats 2 --rounds 2 --check \
+  --async-depth 2
+
 echo "== example smoke: orbital geometry constellation (batched Keplerian"
 echo "   propagation -> extracted passes -> ContactPlans, parity-checked) =="
 timeout 600 python examples/constellation_sim.py --sats 2 --rounds 3 \
@@ -57,12 +62,12 @@ XLA_FLAGS="--xla_force_host_platform_device_count=2" \
   --devices 2 --check
 
 echo "== fleet bench smoke (tiny config, incl. sharded-path parity gate,"
-echo "   the contact-plan batched/reference/async parity gate, and the"
-echo "   fault-sweep retry/watchdog parity gates) =="
+echo "   the contact-plan batched/reference/async parity gate, the depth"
+echo "   sweep, and the fault-sweep retry/watchdog parity gates) =="
 FLEET_BENCH_SATS=2 FLEET_BENCH_ROUNDS=1 FLEET_BENCH_ITERS=1 \
   FLEET_BENCH_DEVICES=1,2 FLEET_BENCH_SHARD_SATS=3 \
   FLEET_BENCH_STATIONS=2 FLEET_BENCH_CONTACT_SATS=3 \
-  FLEET_BENCH_ORBITAL_SATS=4 \
+  FLEET_BENCH_ORBITAL_SATS=4 FLEET_BENCH_DEPTHS=0,1,2 \
   FLEET_BENCH_FAULT_SATS=2 FLEET_BENCH_FAULT_RATES=0,0.25 \
   FLEET_BENCH_JSON=BENCH_fleet_smoke.json \
   timeout 900 python -m benchmarks.run fleet --strict

@@ -37,22 +37,29 @@ Three pieces replace the loop:
   stage loop (:func:`execute_plan_reference`, differentially gated by
   tests/test_contact.py at 0.0 deviation for all five policies).
 
-* :class:`GroundSegment` — the fleet's persistent contact executor.
-  The ground recounts of a round are batched across all windows
-  (shared fixed-shape counting batches, as before) and — with
-  ``overlap=True`` — run on a worker thread so round *k*'s recount
-  hides behind round *k+1*'s ingest dispatch (jax releases the GIL
-  while compiled programs execute, and CPU PJRT dispatch is async).
-  The overlap is exact: GroundRecount and Aggregate read only their own
-  segment's frozen selection, charge nothing, and
-  ``Fleet.results()/finalize()`` sync before reading predictions.
-  ``overlap=False`` (the default) is the synchronous fallback — same
-  arithmetic, inline.
+* :class:`GroundSegment` — the fleet's persistent contact executor: a
+  bounded depth-``k`` recount pipeline. The ground recounts of a round
+  are batched across all windows (shared fixed-shape counting batches,
+  as before) and — with ``depth >= 1`` — dispatched to a worker thread
+  so up to ``depth`` rounds' recounts stay in flight behind foreground
+  ingest dispatch (jax releases the GIL while compiled programs
+  execute, and CPU PJRT dispatch is async). :meth:`GroundSegment.execute`
+  applies backpressure: when ``depth`` rounds are already queued, the
+  oldest retires before a new round enters. The overlap is exact at
+  every depth: each round's recount work is *snapshotted at dispatch*
+  (which segments to recount under which frozen selection, which to
+  Aggregate), GroundRecount and Aggregate read only that snapshot and
+  charge nothing, concurrent rounds write disjoint segments (a segment
+  is recounted only in the round where it delivered or was permanently
+  lost), and ``Fleet.results()/finalize()`` sync before reading
+  predictions. ``depth=0`` (the default) recounts inline — the
+  synchronous fallback, bit-identical output at every depth.
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -166,6 +173,14 @@ class ContactPlan:
         round-robin from ``start``, each offered ``budget_bytes``
         (None = pending entitlement). Returns ``(plan, next_start)`` so
         the caller can carry the rotation pointer across rounds."""
+        if int(n_sats) < 1:
+            raise ValueError(
+                f"ContactPlan.rotating: n_sats must be >= 1 to rotate "
+                f"over, got {int(n_sats)}")
+        if int(stations) < 0:
+            raise ValueError(
+                f"ContactPlan.rotating: stations must be >= 0, got "
+                f"{int(stations)}")
         wins, ptr = [], int(start)
         for _ in range(int(stations)):
             wins.append((ptr, budget_bytes))
@@ -345,37 +360,81 @@ def _apply_corruption(fleet, ctx: FaultContext, served, p: int) -> None:
         fleet.ledger.refund_downlink_windows(r_sats, r_spends, r_bws)
 
 
-def _recount_aggregate(fleet, jobs) -> None:
+class _RecountWork:
+    """One round's deferred recount, snapshotted at dispatch time.
+
+    ``by_thresh`` maps score threshold -> ``[(mission, seg, downlink)]``
+    recount items (the segment's *frozen* downlink selection, captured
+    on the foreground thread), ``agg`` is the ``[(mission, seg,
+    window)]`` Aggregate list. The snapshot is what makes depth >= 2
+    race-free: a later round's foreground drain may re-open a requeued
+    segment (resetting ``seg.requeued``/``seg.corrupted`` and rewriting
+    ``seg.selection``) while this round's worker is still queued —
+    flags and selections read at worker-run time would race, the
+    dispatch-time snapshot cannot. A segment is recounted + aggregated
+    only in the round where it delivered or was permanently lost, so
+    concurrent rounds' snapshots write disjoint segments."""
+
+    __slots__ = ("by_thresh", "agg")
+
+    def __init__(self, by_thresh, agg):
+        self.by_thresh = by_thresh
+        self.agg = agg
+
+
+def _recount_plan(fleet, jobs) -> _RecountWork:
+    """Snapshot one round's recount work (foreground, at dispatch)."""
+    by_thresh: Dict[float, list] = {}
+    agg: list = []
+    for _, _, m, window, segs in jobs:
+        for seg in segs:
+            if not seg.corrupted:
+                by_thresh.setdefault(m.pcfg.score_thresh, []).append(
+                    (m, seg, seg.selection.downlink))
+            # else: the ground discarded this attempt's bytes — nothing
+            # to recount (a retry re-transmits; a lost segment already
+            # holds zero ground counts)
+            if not seg.requeued:
+                agg.append((m, seg, window))
+            # else: retrying in a later round — no prediction yet
+    return _RecountWork(by_thresh, agg)
+
+
+def _recount_run(fleet, work: _RecountWork,
+                 cancel: Optional[threading.Event] = None) -> None:
     """The deferrable half: ground recounts of EVERY window in the
     round share fixed-shape counting batches (grouped per threshold),
-    then Aggregate fuses predictions. Reads only each segment's frozen
-    selection and charges nothing — safe to overlap with the next
-    round's ingest."""
-    by_thresh: Dict[float, list] = {}
-    for _, _, m, _, segs in jobs:
-        for seg in segs:
-            if seg.corrupted:
-                # the ground discarded this attempt's bytes: nothing to
-                # recount (a retry re-transmits; a lost segment already
-                # holds zero ground counts)
-                continue
-            by_thresh.setdefault(m.pcfg.score_thresh, []).append((m, seg))
+    then Aggregate fuses predictions. Reads only the dispatch-time
+    snapshot (:func:`_recount_plan`) and charges nothing — safe to
+    overlap with later rounds' ingest and with other queued rounds'
+    recounts. ``cancel`` is checked between threshold groups, before
+    every write-back, and before each Aggregate: a worker abandoned by
+    the watchdog writes NOTHING after cancellation, so the synchronous
+    recovery recount never sees concurrent mutation."""
     params, cfg = fleet.ground
-    for thresh, items in by_thresh.items():
-        parts = [(seg.tiles_gd, seg.selection.downlink) for _, seg in items]
+    for thresh, items in work.by_thresh.items():
+        if cancel is not None and cancel.is_set():
+            return
+        parts = [(seg.tiles_gd, down) for _, seg, down in items]
         results = count_tiles_multi(params, cfg, parts, score_thresh=thresh,
                                     sharding=fleet.sharding)
-        for (m, seg), (c, _) in zip(items, results):
+        if cancel is not None and cancel.is_set():
+            return  # abandoned mid-count: discard, write nothing
+        for (m, seg, down), (c, _) in zip(items, results):
             counts_gd = np.zeros(seg.n)
-            down = seg.selection.downlink
             if len(down):
                 counts_gd[down] = c
             seg.counts_gd = counts_gd[seg.rep_of]
-    for _, _, m, window, segs in jobs:
-        for seg in segs:
-            if seg.requeued:
-                continue  # retrying in a later round: no prediction yet
-            m.contact_stages[3].run(m, seg, window)  # Aggregate
+    for m, seg, window in work.agg:
+        if cancel is not None and cancel.is_set():
+            return
+        m.contact_stages[3].run(m, seg, window)  # Aggregate
+
+
+def _recount_aggregate(fleet, jobs,
+                       cancel: Optional[threading.Event] = None) -> None:
+    """Plan + run in one call — the inline (depth 0) recount path."""
+    _recount_run(fleet, _recount_plan(fleet, jobs), cancel=cancel)
 
 
 def _contact_window_faulty(m, budget_bytes, ctx: FaultContext,
@@ -473,73 +532,124 @@ def execute_plan_reference(fleet, plan: ContactPlan,
 # overlapped ground recount
 # ---------------------------------------------------------------------------
 
+class _InFlightRound:
+    """One queued round of the recount pipeline: its dispatch-time work
+    snapshot, the worker thread running it, that worker's cooperative
+    cancel event, any exception it raised, and its wall time — recorded
+    per round (never into the shared accumulator) so an abandoned
+    worker's clock can simply be ignored at retirement."""
+
+    __slots__ = ("work", "cancel", "thread", "err", "worker_s")
+
+    def __init__(self, work: _RecountWork):
+        self.work = work
+        self.cancel = threading.Event()
+        self.thread: Optional[threading.Thread] = None
+        self.err: Optional[BaseException] = None
+        self.worker_s = 0.0
+
+
 class GroundSegment:
-    """A fleet's persistent ground-segment executor.
+    """A fleet's persistent ground-segment executor: a bounded
+    depth-``k`` recount pipeline.
 
-    Owns the deferred-recount state: with ``overlap=True``,
-    :meth:`execute` returns after Select + Downlink (reports complete,
-    budget state final) and runs the round's batched GroundRecount +
-    Aggregate on a worker thread, so the recount of round *k* hides
-    behind whatever the caller does next — typically round *k+1*'s
-    ingest dispatch. :meth:`sync` joins (and re-raises worker
-    exceptions); ``Fleet.results()/finalize()`` and the next
-    :meth:`execute` call it implicitly, so predictions are never read
-    while a recount is in flight. ``overlap=False`` recounts inline —
-    the synchronous fallback, bit-identical output either way.
+    With ``depth >= 1``, :meth:`execute` returns after Select +
+    Downlink (reports complete, budget state final) and queues the
+    round's batched GroundRecount + Aggregate on a worker thread, so up
+    to ``depth`` rounds' recounts stay in flight behind whatever the
+    caller does next — typically later rounds' ingest dispatch. When
+    the queue is full, :meth:`execute` applies backpressure: the oldest
+    round retires (its worker joins and its results land) before the
+    new round enters. :meth:`sync` retires every queued round in FIFO
+    order (re-raising worker exceptions); ``Fleet.results()/finalize()``
+    call it implicitly, so predictions are never read while a recount
+    is in flight. ``depth=0`` recounts inline — the synchronous
+    fallback, bit-identical output at every depth: each round's work is
+    snapshotted at dispatch (:func:`_recount_plan`), recounts read only
+    their snapshot and charge nothing, and concurrent rounds write
+    disjoint segments.
 
-    **Watchdog** (``watchdog_s``): :meth:`sync` joins with that timeout;
-    a worker still alive past it is cancelled (a cooperative event — the
-    daemon thread is abandoned if truly hung) and the round's recount
+    **Watchdog** (``watchdog_s``): each retirement joins with that
+    timeout; a worker still alive past it is cancelled (a cooperative
+    event — :func:`_recount_run` writes nothing once it is set; the
+    daemon thread is abandoned if truly hung) and that round's recount
     re-runs synchronously. Recounts charge NOTHING and only overwrite
-    per-segment outputs, so the retry is idempotent and the watchdog arm
-    stays bit-equal to a synchronous round even if the stalled worker
-    later limps home. An injected :class:`~repro.core.faults.WorkerCrash`
-    recovers the same way; any real worker exception surfaces exactly
-    once at :meth:`sync`, with every ledger lane intact.
+    per-segment outputs, so the retry is idempotent and the watchdog
+    arm stays bit-equal to a synchronous round even if the stalled
+    worker later limps home — cancelled workers cannot write. An
+    injected :class:`~repro.core.faults.WorkerCrash` recovers the same
+    way, per queued round; any real worker exception surfaces exactly
+    once at :meth:`sync`, with every ledger lane intact and the
+    remaining queued rounds still pending (the next sync retires them).
 
     **Lifecycle**: GroundSegment is a context manager. A clean ``with``
     exit syncs (surfacing errors normally); an exceptional exit calls
-    :meth:`close`, which cancels and joins the worker WITHOUT raising —
-    so an exception between :meth:`execute` and :meth:`sync` can never
-    leak a live thread or orphan pending recount jobs.
+    :meth:`close`, which cancels every queued round and joins each
+    worker briefly WITHOUT raising — so an exception between
+    :meth:`execute` and :meth:`sync` can never leak a live thread or
+    orphan pending recount work, at any depth.
 
     Wall-time accounting for the bench/summary: ``recount_s`` is the
-    cumulative recount time (worker wall when overlapped, inline wall
-    when not), ``wait_s`` the time :meth:`sync` actually blocked.
+    cumulative recount wall time (per-round worker wall when deferred,
+    inline wall when not; a watchdog/crash recovery charges the blocked
+    join + synchronous retry instead of the abandoned worker's clock),
+    ``wait_s`` the time the foreground actually blocked on retirement
+    (sync joins, backpressure joins, and recovery recounts alike).
+    ``wait_s <= recount_s`` holds by construction per retired round.
     ``hidden_fraction`` = 1 - wait/recount is the share of recount time
-    the overlap hid behind foreground work.
+    the pipeline hid behind foreground work.
     """
 
     def __init__(self, fleet, overlap: bool = False,
-                 watchdog_s: Optional[float] = None):
+                 watchdog_s: Optional[float] = None,
+                 depth: Optional[int] = None):
+        if depth is None:
+            depth = 1 if overlap else 0
+        depth = int(depth)
+        if depth < 0:
+            raise ValueError(
+                f"GroundSegment: pipeline depth must be >= 0 "
+                f"(0 = synchronous), got {depth}")
         self.fleet = fleet
-        self.overlap = bool(overlap)
+        self.depth = depth
         self.watchdog_s = watchdog_s
-        self._thread: Optional[threading.Thread] = None
-        self._err: Optional[BaseException] = None
-        self._jobs = None
-        self._cancel: Optional[threading.Event] = None
+        self._queue: "deque[_InFlightRound]" = deque()
         self.recount_s = 0.0
         self.wait_s = 0.0
         self.rounds_deferred = 0
+        self.max_in_flight = 0
+
+    @property
+    def overlap(self) -> bool:
+        """True when recounts are deferred at all (depth >= 1)."""
+        return self.depth > 0
+
+    @property
+    def in_flight(self) -> int:
+        """Rounds currently queued in the pipeline."""
+        return len(self._queue)
 
     def execute(self, plan: ContactPlan,
                 fault_ctx: Optional[FaultContext] = None):
-        self.sync()
+        while self._queue and len(self._queue) >= self.depth:
+            # backpressure: the oldest in-flight round retires before a
+            # new one may enter the bounded pipeline
+            self._retire(self._queue.popleft())
         out, jobs = execute_plan(self.fleet, plan,
-                                 recount_inline=not self.overlap,
+                                 recount_inline=self.depth == 0,
                                  fault_ctx=fault_ctx)
-        if jobs:  # overlap path: defer the recount
+        if jobs:  # pipeline path: snapshot and defer the recount
             self.rounds_deferred += 1
-            self._jobs = jobs
-            self._cancel = threading.Event()
+            rnd = _InFlightRound(_recount_plan(self.fleet, jobs))
             worker_fault = fault_ctx.worker if fault_ctx is not None else None
             stall_s = (fault_ctx.faults.stall_s if fault_ctx is not None
                        else 0.0)
-            self._thread = threading.Thread(
-                target=self._recount_job,
-                args=(jobs, worker_fault, stall_s, self._cancel), daemon=True)
-            self._thread.start()
+            rnd.thread = threading.Thread(
+                target=self._recount_job, args=(rnd, worker_fault, stall_s),
+                daemon=True)
+            self._queue.append(rnd)
+            self.max_in_flight = max(self.max_in_flight, len(self._queue))
+            rnd.thread.start()
         return out
 
     def execute_reference(self, plan: ContactPlan,
@@ -550,7 +660,7 @@ class GroundSegment:
     def _fault_stats(self):
         return getattr(self.fleet, "fault_stats", None)
 
-    def _recount_job(self, jobs, worker_fault, stall_s, cancel):
+    def _recount_job(self, rnd: _InFlightRound, worker_fault, stall_s):
         t0 = time.perf_counter()
         try:
             if worker_fault == "crash":
@@ -563,67 +673,73 @@ class GroundSegment:
                 if stats is not None:
                     stats.worker_stalls += 1
                 time.sleep(stall_s)
-                if cancel.is_set():
-                    return  # the watchdog took the round over; write nothing
-            _recount_aggregate(self.fleet, jobs)
-        except BaseException as e:  # surfaced (or recovered) at sync()
-            self._err = e
+            _recount_run(self.fleet, rnd.work, cancel=rnd.cancel)
+        except BaseException as e:  # surfaced (or recovered) at retirement
+            rnd.err = e
         finally:
-            self.recount_s += time.perf_counter() - t0
+            # per-round clock, read only after a clean join: an
+            # abandoned worker's wall time is never accounted
+            rnd.worker_s = time.perf_counter() - t0
 
     def sync(self) -> None:
-        """Join any in-flight recount (bounded by the watchdog timeout
-        when one is set); recover injected crashes/stalls by recounting
-        synchronously, re-raise real worker exceptions exactly once."""
-        t, self._thread = self._thread, None
-        jobs, self._jobs = self._jobs, None
-        cancel, self._cancel = self._cancel, None
-        if t is not None:
-            t0 = time.perf_counter()
-            t.join(self.watchdog_s)
-            self.wait_s += time.perf_counter() - t0
-            if t.is_alive():
-                # watchdog timeout: cancel the worker (abandoned if truly
-                # hung — it is a daemon and a late recount is idempotent)
-                # and take the round over synchronously
-                cancel.set()
-                self._err = None
-                self._recover(jobs)
-                return
-        err, self._err = self._err, None
-        if err is not None:
-            if isinstance(err, WorkerCrash):
-                self._recover(jobs)  # injected crash: recoverable
-            else:
-                # real failure: surfaced exactly once; recounts charge
-                # nothing, so every ledger lane is intact
-                raise err
+        """Retire every queued round in FIFO order (each join bounded
+        by the watchdog timeout when one is set); recover injected
+        crashes and watchdog-cancelled stalls by recounting that round
+        synchronously, re-raise real worker exceptions exactly once —
+        leaving later queued rounds pending for the next sync."""
+        while self._queue:
+            self._retire(self._queue.popleft())
 
-    def _recover(self, jobs) -> None:
-        """Synchronous recount retry of an abandoned round (idempotent:
-        recounts are pure writes of per-segment outputs)."""
+    def _retire(self, rnd: _InFlightRound) -> None:
+        t0 = time.perf_counter()
+        rnd.thread.join(self.watchdog_s)
+        waited = time.perf_counter() - t0
+        if rnd.thread.is_alive():
+            # watchdog timeout: cancel the worker (it writes nothing
+            # once the event is set; abandoned if truly hung — it is a
+            # daemon) and take the round over synchronously
+            rnd.cancel.set()
+            self._recover(rnd, waited)
+            return
+        if isinstance(rnd.err, WorkerCrash):
+            self._recover(rnd, waited)  # injected crash: recoverable
+            return
+        self.wait_s += waited
+        self.recount_s += max(rnd.worker_s, waited)
+        if rnd.err is not None:
+            # real failure: surfaced exactly once; recounts charge
+            # nothing, so every ledger lane is intact
+            raise rnd.err
+
+    def _recover(self, rnd: _InFlightRound, waited: float) -> None:
+        """Synchronous recount retry of an abandoned/crashed round
+        (idempotent: recounts are pure writes of per-segment outputs).
+        The whole recovery blocks the foreground, so it lands in BOTH
+        ``wait_s`` and ``recount_s`` — a recovered round hides
+        nothing — and the abandoned worker's clock is ignored."""
         stats = self._fault_stats()
         if stats is not None:
             stats.watchdog_recoveries += 1
-        if jobs:
-            t0 = time.perf_counter()
-            _recount_aggregate(self.fleet, jobs)
-            self.recount_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _recount_run(self.fleet, rnd.work)
+        blocked = waited + (time.perf_counter() - t0)
+        self.wait_s += blocked
+        self.recount_s += blocked
 
     def close(self) -> None:
-        """Release the worker without surfacing results or errors:
-        cancel any in-flight recount, join briefly (the daemon thread is
-        abandoned if truly hung), and drop pending jobs and stored
-        exceptions. Idempotent; never raises — the teardown path for
-        exceptional exits, so no live thread outlives the fleet."""
-        t, self._thread = self._thread, None
-        cancel, self._cancel = self._cancel, None
-        self._jobs = None
-        self._err = None
-        if cancel is not None:
-            cancel.set()
-        if t is not None and t.is_alive():
-            t.join(self.watchdog_s if self.watchdog_s is not None else 5.0)
+        """Release every queued round without surfacing results or
+        errors: cancel each in-flight recount, join each worker briefly
+        (daemon threads are abandoned if truly hung), and drop pending
+        work and stored exceptions. Idempotent; never raises — the
+        teardown path for exceptional exits, so no live thread outlives
+        the fleet even with multiple rounds in flight."""
+        rounds, self._queue = list(self._queue), deque()
+        for rnd in rounds:
+            rnd.cancel.set()
+        for rnd in rounds:
+            if rnd.thread is not None and rnd.thread.is_alive():
+                rnd.thread.join(
+                    self.watchdog_s if self.watchdog_s is not None else 5.0)
 
     def __enter__(self) -> "GroundSegment":
         return self

@@ -32,13 +32,17 @@ owns the degradation rules that absorb them:
 * **satellite blackout** — a (round, sat) brownout: the pass is skipped
   entirely (no frames, zero harvest, no capture charge — see
   ``Mission.ingest(blackout=True)``).
-* **ground-worker crash / stall** — the async
-  :class:`~repro.core.contact.GroundSegment` worker raises before
-  recounting, or sleeps past the watchdog timeout. The watchdog
-  (``Fleet(watchdog_s=...)``) cancels the worker and retries the
-  recount synchronously — recounts charge nothing and only overwrite
+* **ground-worker crash / stall** — one queued round's worker of the
+  :class:`~repro.core.contact.GroundSegment` recount pipeline raises
+  before recounting, or sleeps past the watchdog timeout. Worker-fault
+  draws key on the contact-round counter, so each round queued in a
+  depth-``k`` pipeline carries its own independent draw. The watchdog
+  (``Fleet(watchdog_s=...)``) cancels that round's worker at
+  retirement (a cancelled worker writes nothing — the cancel event is
+  checked before every write-back) and retries the round's recount
+  synchronously — recounts charge nothing and only overwrite
   per-segment outputs, so the retry is idempotent and bit-equal to the
-  synchronous arm.
+  synchronous arm, at every pipeline depth.
 
 **Degradation machinery**:
 

@@ -34,8 +34,10 @@ lane-stacked ``select_batch`` programs across the round's windows (the
 two-threshold throttles collapse into one vmapped call per drain
 step), Downlink charges through vectorized :class:`FleetLedger` window
 ops, and the ground recounts of every window share counting batches —
-optionally deferred to a worker thread (``async_ground=True``) so
-round *k*'s recount overlaps round *k+1*'s ingest dispatch.
+optionally deferred to the bounded recount pipeline
+(``async_ground=True`` for the single-slot overlap, ``async_depth=k``
+for up to *k* rounds in flight) so round *k*'s recount overlaps later
+rounds' ingest dispatch.
 FIFO-within-window byte semantics are preserved exactly (a window's
 remaining budget is its plan budget minus the prefix sum of its
 earlier segments' spends), so the batched planner is bit-equal to
@@ -121,7 +123,18 @@ class Fleet:
         recount to a worker thread so it overlaps the next round's
         ingest dispatch (:class:`~repro.core.contact.GroundSegment`;
         ``results()``/``finalize()`` sync first). ``False`` (default)
-        recounts inline — same arithmetic, synchronous.
+        recounts inline — same arithmetic, synchronous. Shorthand for
+        ``async_depth=1``.
+    async_depth : bounded recount-pipeline depth — up to this many
+        rounds' deferred recounts stay in flight at once, with
+        backpressure (the oldest retires before a new round enters).
+        ``0`` = synchronous inline recount, ``1`` = the single-slot
+        overlap of ``async_ground``, ``2``-``3`` = deep pipelining of
+        ingest-dispatch / device-compute / ground-recount stages.
+        Bit-equal output at EVERY depth (test-enforced at 0.0 deviation
+        for all five policies). ``None`` (default) derives the depth
+        from ``async_ground``; passing both ``async_ground=True`` and
+        ``async_depth=0`` is a conflict and raises.
     contact_reference : ``True`` pins EVERY contact round (including the
         ``finalize`` flush) to the scalar FIFO-loop reference path —
         the parity oracle / bench baseline of the batched planner.
@@ -144,7 +157,8 @@ class Fleet:
                  energy_cfgs=None, mesh=None, strict_parity: bool = False,
                  async_ground: bool = False, contact_reference: bool = False,
                  faults: Optional[FaultPlan] = None,
-                 watchdog_s: Optional[float] = None):
+                 watchdog_s: Optional[float] = None,
+                 async_depth: Optional[int] = None):
         if isinstance(pcfg, (list, tuple)):
             pcfgs = list(pcfg)
             if n_sats is not None and n_sats != len(pcfgs):
@@ -178,8 +192,13 @@ class Fleet:
         self._batchable = [self._can_batch(m) for m in self.missions]
         self._contact_batchable = [self._can_batch_contact(m)
                                    for m in self.missions]
+        if async_depth is not None and async_ground and int(async_depth) == 0:
+            raise ValueError(
+                "async_ground=True conflicts with async_depth=0 "
+                "(a synchronous pipeline cannot overlap)")
         self.ground_segment = GroundSegment(self, overlap=async_ground,
-                                            watchdog_s=watchdog_s)
+                                            watchdog_s=watchdog_s,
+                                            depth=async_depth)
         self.contact_reference = bool(contact_reference)
         self._ingest_s = 0.0       # cumulative ingest wall time
         self._tiles_ingested = 0   # for summary() throughput
@@ -622,6 +641,9 @@ class Fleet:
         tps = (self._tiles_ingested / self._ingest_s
                if self._ingest_s > 0 else 0.0)
         gseg = self.ground_segment
+        assert gseg.wait_s <= gseg.recount_s, (
+            f"recount accounting invariant broken: wait_s={gseg.wait_s} "
+            f"> recount_s={gseg.recount_s}")
         bytes_spent = float(self.ledger.bytes_spent[:self.n_sats].sum())
         return {
             "n_sats": self.n_sats,
@@ -637,6 +659,9 @@ class Fleet:
             "bytes_downlinked_per_s": (bytes_spent / self._contact_s
                                        if self._contact_s > 0 else 0.0),
             "async_ground": gseg.overlap,
+            "async_depth": gseg.depth,
+            "recount_rounds_deferred": gseg.rounds_deferred,
+            "recount_max_in_flight": gseg.max_in_flight,
             "recount_s": gseg.recount_s,
             "recount_wait_s": gseg.wait_s,
             "recount_hidden_frac": gseg.hidden_fraction,
@@ -661,7 +686,8 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
                  energy_cfgs=None, mesh=None, strict_parity: bool = False,
                  async_ground: bool = False, contact_reference: bool = False,
                  faults: Optional[FaultPlan] = None,
-                 watchdog_s: Optional[float] = None):
+                 watchdog_s: Optional[float] = None,
+                 async_depth: Optional[int] = None):
     """Execute a :class:`~repro.data.scenarios.FleetScenario`.
 
     ``fleet=True`` runs the constellation-batched :class:`Fleet` path
@@ -669,7 +695,9 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
     round's contact events as a declarative
     :class:`~repro.core.contact.ContactPlan`; ``async_ground=True``
     additionally overlaps every round's ground recount with the next
-    round's ingest, and ``contact_reference=True`` swaps the batched
+    round's ingest (``async_depth=k`` generalizes that to a bounded
+    pipeline holding up to ``k`` rounds' recounts in flight — bit-equal
+    at every depth), and ``contact_reference=True`` swaps the batched
     planner for the scalar FIFO-loop reference (the bench baseline).
     ``fleet=False`` runs the looped-Mission parity oracle — one
     sequential ``Mission`` per satellite fed the identical event order.
@@ -691,7 +719,7 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
                    mesh=mesh, strict_parity=strict_parity,
                    async_ground=async_ground,
                    contact_reference=contact_reference, faults=faults,
-                   watchdog_s=watchdog_s)
+                   watchdog_s=watchdog_s, async_depth=async_depth)
         for rnd in scenario.rounds:
             fl.ingest(rnd.frames_per_sat(n), rnd.harvest_per_sat(n))
             if rnd.contacts:

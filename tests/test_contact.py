@@ -8,8 +8,10 @@ draining each window through the scalar FIFO stage loop
 oracle, for all five policies on both the engine and reference execution
 paths. Plus: plan-build-time validation of malformed windows, the
 select_batch default adapter for third-party policies, the vmapped
-batched throttle's bit-parity, and the async (overlapped ground recount)
-path's equivalence to the synchronous fallback.
+batched throttle's bit-parity, and the bounded depth-k recount pipeline
+(``async_depth``) — every depth 0/1/2/3 bit-equal to the synchronous
+fallback, backpressure bounding the in-flight count, and the
+watchdog-abandoned-worker write barrier.
 """
 import numpy as np
 import pytest
@@ -103,6 +105,23 @@ def test_plan_from_scenario_contacts(scenario):
 def test_plan_build_rejects_malformed_windows(windows, err):
     with pytest.raises(ValueError, match=err):
         ContactPlan.build(windows, n_sats=3)
+
+
+def test_rotating_rejects_malformed_fleet_shape():
+    """Regression: ``rotating(n_sats=0, ...)`` used to escape as a bare
+    ``ZeroDivisionError`` from the round-robin modulus instead of the
+    build-time ValueError every other malformed-plan path raises."""
+    with pytest.raises(ValueError, match="n_sats"):
+        ContactPlan.rotating(0, stations=2)
+    with pytest.raises(ValueError, match="n_sats"):
+        ContactPlan.rotating(-3, stations=1)
+    with pytest.raises(ValueError, match="stations"):
+        ContactPlan.rotating(2, stations=-1)
+    # the degenerate-but-valid edges still build
+    plan, ptr = ContactPlan.rotating(1, stations=0)
+    assert plan.n_windows == 0 and ptr == 0
+    plan, ptr = ContactPlan.rotating(1, stations=2)
+    assert list(plan.sats) == [0, 0] and ptr == 0
 
 
 def test_contact_round_rejects_malformed_windows_at_build_time(counters):
@@ -264,6 +283,115 @@ def test_async_worker_exception_surfaces_at_sync(counters):
         fleet.ground_segment.sync()
     # the error is consumed: the ground segment is usable again
     fleet.ground_segment.sync()
+
+
+# ---------------------------------------------------------------------------
+# bounded depth-k recount pipeline: every depth == the synchronous path
+# ---------------------------------------------------------------------------
+
+DEPTHS = (0, 1, 2, 3)
+
+
+def _run_at_depth(space, ground, pcfg, scenario, depth, **kw):
+    return run_scenario(space, ground, pcfg, scenario, fleet=True,
+                        async_depth=depth, **kw)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_depth_pipeline_bit_equal_engine(method, scenario, counters):
+    """Depth 0/1/2/3 produce identical per-tile predictions, summaries,
+    and ledger lanes through the batched (engine) executor, for every
+    policy — the pipeline acceptance gate at 0.0 deviation."""
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25)
+    want, f0 = _run_at_depth(space, ground, pcfg, scenario, 0)
+    for depth in DEPTHS[1:]:
+        got, fd = _run_at_depth(space, ground, pcfg, scenario, depth)
+        for i, (a, b) in enumerate(zip(got, want)):
+            _assert_same(a, b, f"{method} depth={depth} sat{i}")
+        _assert_ledgers_equal(fd, f0, f"{method} depth={depth}")
+        s = fd.summary()
+        assert s["async_depth"] == depth and s["async_ground"] is True
+        assert s["recount_max_in_flight"] <= depth
+        assert s["recount_wait_s"] <= s["recount_s"]
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_depth_pipeline_bit_equal_reference_path(method, scenario, counters):
+    """The same depth sweep with ``use_engine=False`` satellites (the
+    scalar reference execution path inside the batched round)."""
+    space, ground = counters
+    pcfg = PipelineConfig(method=method, score_thresh=0.25,
+                          use_engine=False)
+    want, f0 = _run_at_depth(space, ground, pcfg, scenario, 0)
+    for depth in (2, 3):
+        got, fd = _run_at_depth(space, ground, pcfg, scenario, depth)
+        for i, (a, b) in enumerate(zip(got, want)):
+            _assert_same(a, b, f"{method} ref-path depth={depth} sat{i}")
+        _assert_ledgers_equal(fd, f0, f"{method} ref-path depth={depth}")
+
+
+def test_depth_backpressure_bounds_in_flight(scenario, counters):
+    """The queue never exceeds the configured depth; with more contact
+    rounds than depth, backpressure actually fills the pipeline."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    _, fd = _run_at_depth(space, ground, pcfg, scenario, 2)
+    s = fd.summary()
+    assert fd.ground_segment.rounds_deferred >= 3
+    assert 1 <= s["recount_max_in_flight"] <= 2
+    assert fd.ground_segment.in_flight == 0  # summary() synced
+    # depth 0 defers nothing at all
+    _, f0 = _run_at_depth(space, ground, pcfg, scenario, 0)
+    assert f0.ground_segment.rounds_deferred == 0
+    assert f0.summary()["recount_max_in_flight"] == 0
+
+
+def test_depth_knob_validation(counters):
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only")
+    with pytest.raises(ValueError, match="depth"):
+        Fleet(space, ground, pcfg, n_sats=1, async_depth=-1)
+    with pytest.raises(ValueError, match="conflicts"):
+        Fleet(space, ground, pcfg, n_sats=1, async_ground=True,
+              async_depth=0)
+    # async_ground alone is depth-1 shorthand; async_depth overrides
+    assert Fleet(space, ground, pcfg, n_sats=1,
+                 async_ground=True).ground_segment.depth == 1
+    assert Fleet(space, ground, pcfg, n_sats=1,
+                 async_depth=3).ground_segment.depth == 3
+    assert Fleet(space, ground, pcfg, n_sats=1).ground_segment.depth == 0
+
+
+def test_depth2_worker_exception_leaves_later_rounds_pending(counters):
+    """A real worker failure surfaces exactly once at sync; rounds
+    queued BEHIND the failed one stay pending and retire cleanly on the
+    next sync — no work is silently dropped."""
+    space, ground = counters
+    rng = np.random.default_rng(9)
+    img, b, c = make_scene(rng, SCENE)
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    fleet = Fleet(space, ground, pcfg, n_sats=1, async_depth=2)
+
+    fleet.ingest([revisit_frames(rng, img, b, c, 1)])
+    bad_seg = fleet.missions[0]._segments[0]  # round 1 drains this one
+    stage = fleet.missions[0].contact_stages[3]
+    real_run = type(stage).run
+
+    def boom_on_first(self, m, seg, window):
+        if seg is bad_seg:
+            raise RuntimeError("recount exploded")
+        return real_run(self, m, seg, window)
+
+    stage.run = boom_on_first.__get__(stage)
+    fleet.contact_round(windows=[(0, 2e6)])
+    fleet.ingest([revisit_frames(rng, img, b, c, 1)])
+    fleet.contact_round(windows=[(0, 2e6)])
+    with pytest.raises(RuntimeError, match="recount exploded"):
+        fleet.ground_segment.sync()
+    assert fleet.ground_segment.in_flight == 1  # round 2 still queued
+    fleet.ground_segment.sync()  # retires cleanly
+    assert fleet.ground_segment.in_flight == 0
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,9 @@ The acceptance gates of the robustness PR:
   synchronous arm, and ``finalize()`` stays safe after mid-round
   exceptions.
 """
+import threading
+import time
+
 import numpy as np
 import pytest
 
@@ -400,6 +403,100 @@ def test_watchdog_recovers_stalled_worker(scenario, counters):
     assert fa.summary()["fault_watchdog_recoveries"] == 1
 
 
+def test_watchdog_recovery_at_depth2(scenario, counters):
+    """Crash and stall on two different queued rounds of a depth-2
+    pipeline: each recovers independently at its own retirement, and
+    the run stays bit-equal to the synchronous arm."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    fp = FaultPlan(worker_faults={0: "crash", 1: "stall"}, stall_s=5.0)
+    got, fa = run_scenario(space, ground, pcfg, scenario, faults=fp,
+                           async_depth=2, watchdog_s=0.05)
+    want, fs = run_scenario(space, ground, pcfg, scenario, faults=fp)
+    for i, (a, b) in enumerate(zip(got, want)):
+        _assert_same(a, b, f"depth2-recovery sat{i}")
+    _assert_ledgers_equal(fa, fs, "depth2-recovery")
+    s = fa.summary()
+    assert s["fault_worker_crashes"] == 1
+    assert s["fault_worker_stalls"] == 1
+    assert s["fault_watchdog_recoveries"] >= 2
+    assert s["recount_max_in_flight"] == 2
+
+
+def test_watchdog_abandoned_worker_writes_nothing(counters, monkeypatch):
+    """Regression (watchdog race): a GENUINELY slow worker — not an
+    injected stall — that the watchdog abandons mid-recount must write
+    nothing when it finally limps home. Pre-fix, the cancel event was
+    only checked on the injected-stall path, so the abandoned worker's
+    late (here: garbage) counts landed on top of the recovery's."""
+    import repro.core.contact as contact_mod
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    slow = Fleet(space, ground, pcfg, n_sats=1, async_ground=True,
+                 watchdog_s=0.05)
+    sync = Fleet(space, ground, pcfg, n_sats=1)
+    real = contact_mod.count_tiles_multi
+
+    def slow_garbage_off_main(params, cfg, parts, **kw):
+        res = real(params, cfg, parts, **kw)
+        if threading.current_thread() is not threading.main_thread():
+            time.sleep(0.4)  # blow the watchdog while "counting"...
+            return [(c + 100.0, aux) for c, aux in res]  # ...then garbage
+        return res
+
+    monkeypatch.setattr(contact_mod, "count_tiles_multi",
+                        slow_garbage_off_main)
+    for fl in (slow, sync):
+        fl.ingest([_frames(91, 2)])
+        fl.contact_round(windows=[(0, 4e6)])
+    slow.ground_segment.sync()  # watchdog fires -> synchronous recovery
+    assert slow.summary()["fault_watchdog_recoveries"] == 1
+    time.sleep(0.6)  # give the abandoned worker time to limp home
+    _assert_same(slow.results()[0], sync.results()[0],
+                 "abandoned-worker write barrier")
+
+
+def test_recovery_accounting_stall_no_double_count(counters):
+    """Regression (accounting skew): the abandoned worker's wall clock
+    must NOT land in ``recount_s`` on top of the recovery's (the old
+    double count), and the synchronous recovery must land in ``wait_s``
+    — a recovered round hides exactly nothing."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    fp = FaultPlan(worker_faults={0: "stall"}, stall_s=0.6)
+    fleet = Fleet(space, ground, pcfg, n_sats=1, async_ground=True,
+                  watchdog_s=0.05, faults=fp)
+    fleet.ingest([_frames(92, 2)])
+    fleet.contact_round(windows=[(0, 4e6)])
+    fleet.ground_segment.sync()
+    time.sleep(0.8)  # the abandoned worker finishes well after recovery
+    gseg = fleet.ground_segment
+    assert fleet.summary()["fault_watchdog_recoveries"] == 1
+    assert gseg.wait_s <= gseg.recount_s
+    assert gseg.recount_s < 0.5, (
+        "the abandoned worker's stall leaked into recount_s")
+    assert gseg.hidden_fraction == 0.0
+
+
+def test_recovery_accounting_crash_hides_nothing(counters):
+    """Regression (accounting skew, other direction): a WorkerCrash
+    recovery recounts synchronously — that blocked time must land in
+    ``wait_s``, so the recovered round reports 0% hidden rather than
+    pretending the recount overlapped anything."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    fp = FaultPlan(worker_faults={0: "crash"})
+    fleet = Fleet(space, ground, pcfg, n_sats=1, async_ground=True,
+                  watchdog_s=5.0, faults=fp)
+    fleet.ingest([_frames(93, 2)])
+    fleet.contact_round(windows=[(0, 4e6)])
+    fleet.ground_segment.sync()
+    gseg = fleet.ground_segment
+    assert fleet.summary()["fault_watchdog_recoveries"] == 1
+    assert gseg.wait_s <= gseg.recount_s
+    assert gseg.hidden_fraction == 0.0
+
+
 # ---------------------------------------------------------------------------
 # lifecycle: context managers, mid-round exceptions, ledger integrity
 # ---------------------------------------------------------------------------
@@ -413,9 +510,8 @@ def test_ground_segment_context_manager_joins_worker(counters):
         fleet.ingest([_frames(81, 2)])
         fleet.contact_round(windows=[(0, 4e6)])
         assert fleet.ground_segment.rounds_deferred == 1
-    # clean exit synced: no worker thread left behind
-    assert fleet.ground_segment._thread is None
-    assert fleet.ground_segment._jobs is None
+    # clean exit synced: no round left in flight
+    assert fleet.ground_segment.in_flight == 0
 
 
 def test_exceptional_exit_closes_without_raising(counters):
@@ -434,7 +530,29 @@ def test_exceptional_exit_closes_without_raising(counters):
             fleet.missions[0].contact_stages[3].run = boom  # Aggregate
             fleet.contact_round(windows=[(0, 2e6)])
             raise RuntimeError("user error")
-    assert fleet.ground_segment._thread is None
+    assert fleet.ground_segment.in_flight == 0
+    fleet.close()  # idempotent
+    fleet.close()
+
+
+def test_close_with_multiple_rounds_in_flight(counters):
+    """An exceptional exit with a FULL depth-3 pipeline (two stalled
+    workers still sleeping) cancels every queued round and returns
+    without raising — no leaked threads, no late writes, idempotent."""
+    space, ground = counters
+    pcfg = PipelineConfig(method="ground_only", score_thresh=0.25)
+    fp = FaultPlan(worker_faults={0: "stall", 1: "stall"}, stall_s=1.0)
+    fleet = Fleet(space, ground, pcfg, n_sats=1, async_depth=3,
+                  watchdog_s=0.1, faults=fp)
+    with pytest.raises(RuntimeError, match="user error"):
+        with fleet:
+            for k in range(2):
+                fleet.ingest([_frames(94 + k)])
+                fleet.contact_round(windows=[(0, 2e6)])
+            assert fleet.ground_segment.in_flight == 2
+            raise RuntimeError("user error")
+    assert fleet.ground_segment.in_flight == 0
+    assert fleet.ground_segment.max_in_flight == 2
     fleet.close()  # idempotent
     fleet.close()
 

@@ -20,7 +20,11 @@ Invariants (paper §III-A-1 budget model):
     FIFO-within-window prefix-drain semantics (each pending segment's
     spend is exactly ``min(requested, budget - earlier spends)``), and
     stays result-equal to the scalar FIFO reference under randomly
-    drawn window schedules.
+    drawn window schedules;
+  * the depth-k ground-recount pipeline is completion-order
+    independent: random stall patterns over queued rounds (with
+    corruption/retry in play) never change results vs the synchronous
+    path.
 """
 import numpy as np
 import pytest
@@ -285,6 +289,48 @@ def test_fault_ledger_and_retry_invariants(seed, drop, corrupt, blackout,
     assert float(led.bytes_spent[:2].sum()) == pytest.approx(
         stats.bytes_delivered + stats.bytes_wasted - stats.bytes_refunded,
         rel=1e-9, abs=1e-6)
+
+
+@given(method=st.sampled_from(METHODS), seed=st.integers(0, 2**20),
+       depth=st.integers(1, 3),
+       stalls=st.lists(st.booleans(), min_size=3, max_size=3),
+       corrupt=st.floats(0.0, 0.5))
+@settings(max_examples=6, deadline=None)
+def test_queued_round_completion_order_never_affects_results(
+        method, seed, depth, stalls, corrupt, counters):
+    """Whatever order queued rounds' workers complete in — injected
+    stalls make stalled rounds finish AFTER later rounds' workers — the
+    depth-k recount pipeline stays bit-equal to the synchronous path,
+    including under corruption/retry, where a requeued segment's
+    selection is rewritten by a later round's foreground drain while
+    earlier rounds are still in flight (the dispatch-time snapshot
+    property)."""
+    space, ground = counters
+    faults = FaultPlan(
+        seed=seed, corrupt_rate=corrupt, max_retries=2,
+        worker_faults={r: "stall" for r, s in enumerate(stalls) if s},
+        stall_s=0.05)
+
+    def run(async_depth):
+        fleet = Fleet(space, ground, _pcfg(method), n_sats=2,
+                      faults=faults, async_depth=async_depth)
+        tb = fleet.missions[0].tile_bytes
+        for k in range(3):
+            fleet.ingest([_frames(seed + k, 1),
+                          _frames(seed + 11 * k + 5, 1)])
+            fleet.contact_round(stations=2, budget_bytes=2.0 * tb)
+        return fleet.finalize(), fleet
+
+    got, fa = run(depth)
+    want, fs = run(0)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a.per_tile_pred, b.per_tile_pred)
+        assert a.summary() == b.summary()
+    for f in ("budget_j", "e_down", "bytes_budget", "bytes_requested",
+              "bytes_spent"):
+        np.testing.assert_array_equal(getattr(fa.ledger, f),
+                                      getattr(fs.ledger, f))
+    assert fa.ground_segment.wait_s <= fa.ground_segment.recount_s
 
 
 @given(seed=st.integers(0, 2**20), drop=st.floats(0.0, 0.4),
