@@ -87,6 +87,10 @@ def main():
                          "to K rounds' recounts in flight behind later "
                          "rounds' ingest (0 = synchronous; exact at "
                          "every depth)")
+    ap.add_argument("--ingest-overlap", action="store_true",
+                    help="round-pipeline ingest itself: defer each "
+                         "round's device->host fetches behind the next "
+                         "round's dispatch (exact either way)")
     ap.add_argument("--faults", type=int, default=None, metavar="SEED",
                     help="inject a deterministic fault schedule drawn "
                          "from this seed (drops, outages, truncations, "
@@ -155,6 +159,7 @@ def main():
                                    fleet=not args.oracle, mesh=mesh,
                                    async_ground=args.async_ground,
                                    async_depth=args.async_depth,
+                                   ingest_overlap=args.ingest_overlap,
                                    faults=faults)
     if args.check:
         if faults is not None:
@@ -223,6 +228,12 @@ def main():
               f"dedup_batched={s['dedup_batched']}, "
               f"ingest {s['tiles_per_s']:.0f} tiles/s "
               f"({s['tiles_per_s_per_sat']:.0f}/sat)")
+        if s["ingest_overlap"]:
+            print(f"ingest pipeline: {s['ingest_rounds_deferred']} rounds "
+                  f"deferred, dispatch {s['ingest_dispatch_s']:.2f}s, "
+                  f"fetch {s['host_fetch_s']:.2f}s of "
+                  f"{s['device_compute_s']:.2f}s in flight "
+                  f"({s['ingest_hidden_frac']:.0%} hidden)")
         print(f"ground segment: {s['windows_served']} windows in "
               f"{s['contact_s']:.2f}s ({s['windows_per_s']:.1f} windows/s, "
               f"{s['bytes_downlinked_per_s'] / 1e6:.1f} MB/s downlinked)"

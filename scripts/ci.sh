@@ -39,6 +39,11 @@ echo "   parity-checked against the synchronous path) =="
 timeout 600 python examples/constellation_sim.py --sats 2 --rounds 2 --check \
   --async-depth 2
 
+echo "== example smoke: round-pipelined ingest (deferred fetch tail,"
+echo "   parity-checked against the looped-Mission oracle) =="
+timeout 600 python examples/constellation_sim.py --sats 2 --rounds 3 --check \
+  --ingest-overlap
+
 echo "== example smoke: orbital geometry constellation (batched Keplerian"
 echo "   propagation -> extracted passes -> ContactPlans, parity-checked) =="
 timeout 600 python examples/constellation_sim.py --sats 2 --rounds 3 \
@@ -63,12 +68,14 @@ XLA_FLAGS="--xla_force_host_platform_device_count=2" \
 
 echo "== fleet bench smoke (tiny config, incl. sharded-path parity gate,"
 echo "   the contact-plan batched/reference/async parity gate, the depth"
-echo "   sweep, and the fault-sweep retry/watchdog parity gates) =="
+echo "   sweep, the ingest-overlap arms + transfer-cache churn gate, and"
+echo "   the fault-sweep retry/watchdog parity gates) =="
 FLEET_BENCH_SATS=2 FLEET_BENCH_ROUNDS=1 FLEET_BENCH_ITERS=1 \
   FLEET_BENCH_DEVICES=1,2 FLEET_BENCH_SHARD_SATS=3 \
   FLEET_BENCH_STATIONS=2 FLEET_BENCH_CONTACT_SATS=3 \
   FLEET_BENCH_ORBITAL_SATS=4 FLEET_BENCH_DEPTHS=0,1,2 \
   FLEET_BENCH_FAULT_SATS=2 FLEET_BENCH_FAULT_RATES=0,0.25 \
+  FLEET_BENCH_OVERLAP=0,1 FLEET_BENCH_OVERLAP_SATS=3 \
   FLEET_BENCH_JSON=BENCH_fleet_smoke.json \
   timeout 900 python -m benchmarks.run fleet --strict
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DetectorConfig
-from repro.core import tiling
+from repro.core import tiling, xfer
 from repro.core.dedup import bucket_size
 from repro.models import detector
 from repro.optim.adamw import adamw
@@ -59,7 +59,7 @@ def _tier_batch(n: int, batch: int, floor: int = 8) -> int:
 
 
 def _count_forward(params, cfg, t, batch: int, score_thresh, nms_iou,
-                   sharding=None):
+                   sharding=None, defer: bool = False):
     """Shared forward tail: zero-pad rows to whole ``batch`` chunks, run
     the one fixed-shape compiled program per chunk, and transfer
     (counts, conf) to host in a single copy -> (2, n_rows_padded).
@@ -68,6 +68,12 @@ def _count_forward(params, cfg, t, batch: int, score_thresh, nms_iou,
     and more than one chunk, the chunks are stacked, lane-padded to a
     device multiple, and counted in ONE sharded
     :func:`_count_tiles_chunks` call across the mesh.
+
+    ``defer=True`` dispatches the forward and returns the stacked
+    (2, n_rows_padded) *device* array WITHOUT the blocking host copy —
+    the caller resolves it at its own round boundary (the fleet's
+    ingest-overlap pipeline), so device compute keeps running behind
+    whatever the foreground does next.
     """
     from repro.core.fleet_sharding import ctx
     sh = ctx(sharding)
@@ -86,15 +92,16 @@ def _count_forward(params, cfg, t, batch: int, score_thresh, nms_iou,
                 [t, jnp.zeros((n_stack - n_chunks, *t.shape[1:]), t.dtype)])
         c, f = _count_tiles_chunks(params, cfg, sh.device_put(t),
                                    score_thresh, nms_iou)
-        return np.asarray(jnp.stack([c[:n_chunks].reshape(-1),
-                                     f[:n_chunks].reshape(-1)]))
+        out = jnp.stack([c[:n_chunks].reshape(-1),
+                         f[:n_chunks].reshape(-1)])
+        return out if defer else np.asarray(out)
     outs_c, outs_f = [], []
     for i in range(n_chunks):
         c, f = count_tiles(params, cfg, t[i], score_thresh, nms_iou)
         outs_c.append(c)
         outs_f.append(f)
-    return np.asarray(jnp.stack([jnp.concatenate(outs_c),
-                                 jnp.concatenate(outs_f)]))
+    out = jnp.stack([jnp.concatenate(outs_c), jnp.concatenate(outs_f)])
+    return out if defer else np.asarray(out)
 
 
 def count_tiles_batched(params, cfg, tiles, batch: int = 64, score_thresh=0.3,
@@ -122,7 +129,9 @@ def count_tiles_batched(params, cfg, tiles, batch: int = 64, score_thresh=0.3,
         n_pad = -(-n // batch) * batch
         idx_pad = np.zeros(n_pad, np.int64)
         idx_pad[:n] = np.asarray(idx)
-        t = jnp.asarray(tiles)[jnp.asarray(idx_pad)]
+        # content-keyed upload cache: repeated-shape rounds gather with
+        # the same index vectors, so steady state issues zero transfers
+        t = jnp.asarray(tiles)[xfer.device_constant(idx_pad)]
     else:
         t = jnp.asarray(tiles)
     # padding trimmed host-side, so every device op ran at a bucketed shape
@@ -131,7 +140,8 @@ def count_tiles_batched(params, cfg, tiles, batch: int = 64, score_thresh=0.3,
 
 
 def count_tiles_multi(params, cfg, parts, batch: int = 64, score_thresh=0.3,
-                      nms_iou: float = 0.25, sharding=None):
+                      nms_iou: float = 0.25, sharding=None,
+                      defer: bool = False):
     """Count several independent gathers in SHARED fixed-shape batches.
 
     ``parts``: list of ``(tiles, idx)`` — e.g. one per satellite of a
@@ -150,7 +160,12 @@ def count_tiles_multi(params, cfg, parts, batch: int = 64, score_thresh=0.3,
     shared batches are placed along the ``sats`` mesh axis and counted
     in one sharded forward call.
 
-    Returns ``[(counts, conf), ...]`` aligned with ``parts``.
+    Returns ``[(counts, conf), ...]`` aligned with ``parts``. With
+    ``defer=True`` the forward is dispatched but the device->host result
+    copy is NOT taken: a zero-argument resolver is returned instead,
+    producing that same list when called — the fleet's ingest-overlap
+    pipeline resolves it at the round's Aggregate/recount boundary while
+    the detector forwards run behind later dispatch.
     """
     # pad each part's gather to a power-of-two bucket (floor 2): shapes
     # stay log-bounded per part size AND tiny parts pack tightly — a
@@ -161,7 +176,8 @@ def count_tiles_multi(params, cfg, parts, batch: int = 64, score_thresh=0.3,
     total = sum(sizes)
     empty = (np.zeros((0,), np.float32), np.zeros((0,), np.float32))
     if total == 0:
-        return [empty for _ in parts]
+        out = [empty for _ in parts]
+        return (lambda: out) if defer else out
     gathered, spans, off = [], [], 0
     for (tiles, idx), k in zip(parts, sizes):
         if not k:
@@ -170,13 +186,20 @@ def count_tiles_multi(params, cfg, parts, batch: int = 64, score_thresh=0.3,
         k_pad = bucket_size(k, 2)
         idx_pad = np.zeros(k_pad, np.int64)  # pad slots gather tile 0,
         idx_pad[:k] = np.asarray(idx)        # trimmed after the forward
-        gathered.append(jnp.asarray(tiles)[jnp.asarray(idx_pad)])
+        gathered.append(jnp.asarray(tiles)[xfer.device_constant(idx_pad)])
         spans.append((off, k))
         off += k_pad
     t = gathered[0] if len(gathered) == 1 else jnp.concatenate(gathered)
-    out = _count_forward(params, cfg, t, _tier_batch(off, batch),
-                         score_thresh, nms_iou, sharding=sharding)
-    return [(out[0, o:o + k], out[1, o:o + k]) if k else empty
+    fwd = _count_forward(params, cfg, t, _tier_batch(off, batch),
+                         score_thresh, nms_iou, sharding=sharding,
+                         defer=defer)
+    if defer:
+        def resolve():
+            out = np.asarray(fwd)  # the single deferred host copy
+            return [(out[0, o:o + k], out[1, o:o + k]) if k else empty
+                    for o, k in spans]
+        return resolve
+    return [(fwd[0, o:o + k], fwd[1, o:o + k]) if k else empty
             for o, k in spans]
 
 

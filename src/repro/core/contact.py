@@ -631,6 +631,12 @@ class GroundSegment:
 
     def execute(self, plan: ContactPlan,
                 fault_ctx: Optional[FaultContext] = None):
+        # a contact round reads segment state (counts, processed masks,
+        # ledger lanes) — any ingest-overlap tail still pending on the
+        # fleet must land first (guarded: non-Fleet drivers lack it)
+        resolve = getattr(self.fleet, "_resolve_ingest_pending", None)
+        if resolve is not None:
+            resolve()
         while self._queue and len(self._queue) >= self.depth:
             # backpressure: the oldest in-flight round retires before a
             # new one may enter the bounded pipeline
@@ -687,6 +693,9 @@ class GroundSegment:
         crashes and watchdog-cancelled stalls by recounting that round
         synchronously, re-raise real worker exceptions exactly once —
         leaving later queued rounds pending for the next sync."""
+        resolve = getattr(self.fleet, "_resolve_ingest_pending", None)
+        if resolve is not None:
+            resolve()
         while self._queue:
             self._retire(self._queue.popleft())
 

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import xfer
 from repro.kernels import ops as kops
 
 # shape-stable dedup: inputs are zero-padded to power-of-two bucket sizes
@@ -326,7 +327,12 @@ def dedup_multi(parts, iters: int = 10, sharding=None):
         m = jnp.stack([_pad_rows(mo, n, n_pad) for _, mo, _, _, n in items])
         ns = np.asarray([n for *_, n in items], np.int32)
         ks = np.asarray([k for _, _, k, _, _ in items], np.int32)
-        keys = jnp.stack([key for _, _, _, key, _ in items])
+        # keys are stacked host-side (keys come straight from host
+        # seeds, so this forces no real compute) and uploaded through
+        # the content-keyed transfer cache below — the fleet's dedup
+        # seeds repeat every round, so steady-state rounds re-upload
+        # neither the key stack nor the lane/cluster count vectors
+        keys = np.stack([np.asarray(key) for _, _, _, key, _ in items])
         g = len(items)
         # lane-pad the sat axis to a power-of-two bucket (then to a
         # device multiple on-mesh): group sizes vary round to round and
@@ -337,14 +343,14 @@ def dedup_multi(parts, iters: int = 10, sharding=None):
             # inert pad lanes: repeat lane 0 (all-real shapes, so the
             # padded program never sees degenerate n=0 inputs)
             reps = np.zeros(g_pad - g, np.int64)
-            m = jnp.concatenate([m, m[jnp.asarray(reps)]])
+            m = jnp.concatenate([m, m[xfer.device_constant(reps)]])
             ns = np.concatenate([ns, ns[reps]])
             ks = np.concatenate([ks, ks[reps]])
-            keys = jnp.concatenate([keys, keys[jnp.asarray(reps)]])
+            keys = np.concatenate([keys, keys[reps]])
         m = sh.device_put(m)
-        ns_j = sh.device_put(jnp.asarray(ns))
-        ks_j = sh.device_put(jnp.asarray(ks))
-        keys = sh.device_put(keys)
+        ns_j = xfer.device_constant(ns, sharding=sh)
+        ks_j = xfer.device_constant(ks, sharding=sh)
+        keys = xfer.device_constant(keys, sharding=sh)
         x, cent = _dedup_multi_core(m, ns_j, ks_j, keys,
                                     k_pad=k_pad, iters=iters)
         assign, rep_mask, sizes, rep_clip = _dedup_finalize_multi(

@@ -143,7 +143,10 @@ def _per_frame_pieces(frames, tile_size: int, sp_size: int, gd_size: int,
     buckets yields bit-identical pieces."""
     groups: dict = {}
     for i, (img, _, _) in enumerate(frames):
-        groups.setdefault(np.asarray(img).shape, []).append(i)
+        # np.shape reads the .shape attribute — np.asarray(img).shape
+        # would materialize a full host copy of a device-resident frame
+        # just to group it
+        groups.setdefault(np.shape(img), []).append(i)
     per_frame = [None] * len(frames)
     for shape, idxs in groups.items():
         chunks = _bucketed_chunks([frames[i][0] for i in idxs], shape,
@@ -156,15 +159,19 @@ def _per_frame_pieces(frames, tile_size: int, sp_size: int, gd_size: int,
     return per_frame
 
 
-def _assemble(parts, frames, tile_size: int, roi_std: np.ndarray = None,
-              n: int = None) -> PreparedFrames:
+def _assemble(parts, frames, tile_size: int, roi_std=None,
+              n: int = None, defer_stats: bool = False) -> PreparedFrames:
     """Per-frame pieces (input order) -> one bucket-padded PreparedFrames.
 
-    ``roi_std``: optional precomputed host copy of the (n,) ROI stddev
-    rows (the multi-workload path transfers the fleet's roi_std in one
-    device->host copy and hands out slices). ``n``: explicit real tile
-    count when the pieces carry trailing pad-frame rows (the
-    single-resolution fast paths pass whole program chunks)."""
+    ``roi_std``: optional precomputed (n,) ROI stddev rows (the
+    multi-workload path transfers the fleet's roi_std in one
+    device->host copy and hands out slices — or device slices under
+    ``defer_stats``). ``n``: explicit real tile count when the pieces
+    carry trailing pad-frame rows (the single-resolution fast paths pass
+    whole program chunks). ``defer_stats=True`` leaves ``roi_std`` a
+    device array (a lazy slice of the fused program's output) instead of
+    forcing the device->host sync here — the caller fetches it at its
+    own round boundary, or never (policies that don't use ROI)."""
     from repro.data.synthetic import tile_counts
 
     if n is None:
@@ -189,9 +196,10 @@ def _assemble(parts, frames, tile_size: int, roi_std: np.ndarray = None,
     tiles_gd = pad(cat(1))
     moments = pad(cat(2)) if with_stats else None
     if roi_std is None and with_stats:
-        roi_std = np.asarray(pad(cat(3)))[:n]
+        rs = pad(cat(3))[:n]
+        roi_std = rs if defer_stats else np.asarray(rs)
     true = np.concatenate([
-        tile_counts(boxes, np.asarray(img).shape[0], tile_size)
+        tile_counts(boxes, np.shape(img)[0], tile_size)
         for img, boxes, _ in frames
     ]).astype(np.float64)
     return PreparedFrames(tiles_sp, tiles_gd, moments, roi_std, true, n)
@@ -211,7 +219,8 @@ def _empty_prepared(sp_size: int, gd_size: int,
 def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
                          gd_size: int,
                          frame_bucket: int = FRAME_BUCKET, sharding=None,
-                         with_stats: bool = True):
+                         with_stats: bool = True,
+                         defer_stats: bool = False):
     """Constellation-batched capture: N independent frame workloads (one
     per satellite) flow through SHARED frame buckets of the fused
     program, then split back into one :class:`PreparedFrames` per
@@ -226,13 +235,20 @@ def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
     :class:`~repro.core.fleet_sharding.FleetSharding`; on-mesh, the
     shared frame buckets are placed along the ``sats`` mesh axis and
     captured in one sharded program call per resolution.
+
+    ``defer_stats=True`` (the fleet's ``ingest_overlap`` path) skips the
+    fleet-wide ``roi_std`` device->host copy: each workload's
+    ``PreparedFrames.roi_std`` is then a *device* slice of the fused
+    program's output (values bit-identical), and the caller materializes
+    it lazily — only for satellites whose policy reads it, and only when
+    it reaches its round's resolution boundary.
     """
     flat = [f for w in workloads for f in w]
     if not flat:
         return [_empty_prepared(sp_size, gd_size, with_stats)
                 for _ in workloads]
 
-    shapes = {np.asarray(img).shape for img, _, _ in flat}
+    shapes = {np.shape(img) for img, _, _ in flat}
     if len(shapes) == 1:
         # common case (one frame resolution fleet-wide): run the shared
         # buckets once and hand each workload a contiguous slice of the
@@ -247,8 +263,11 @@ def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
         else:
             cat = [jnp.concatenate([ck[j] for ck in chunks])
                    for j in range(len(chunks[0]))]
-        # ONE device->host copy of the fleet's ROI stats
-        roi_all = np.asarray(cat[3]) if with_stats else None
+        # ONE device->host copy of the fleet's ROI stats — or, under
+        # defer_stats, no copy at all: workloads get lazy device slices
+        roi_all = cat[3] if with_stats else None
+        if with_stats and not defer_stats:
+            roi_all = np.asarray(roi_all)
         out, pos = [], 0
         for w in workloads:
             if not w:
@@ -271,7 +290,7 @@ def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
             continue
         parts = per_frame[pos:pos + len(w)]
         pos += len(w)
-        out.append(_assemble(parts, w, tile_size))
+        out.append(_assemble(parts, w, tile_size, defer_stats=defer_stats))
     return out
 
 
@@ -292,7 +311,7 @@ def prepare_frames(frames, tile_size: int, sp_size: int, gd_size: int,
 
     groups: dict = {}
     for i, (img, _, _) in enumerate(frames):
-        groups.setdefault(np.asarray(img).shape, []).append(i)
+        groups.setdefault(np.shape(img), []).append(i)
 
     if len(groups) == 1:
         # common case (one frame resolution): chunk outputs are already in

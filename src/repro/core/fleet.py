@@ -80,7 +80,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.dedup as dd
-from repro.core import engine
+from repro.core import engine, xfer
 from repro.core.cascade import count_tiles_multi
 from repro.core.contact import ContactPlan, GroundSegment
 from repro.core.energy import (FleetLedger, max_tiles_within_budget,
@@ -134,7 +134,26 @@ class Fleet:
         Bit-equal output at EVERY depth (test-enforced at 0.0 deviation
         for all five policies). ``None`` (default) derives the depth
         from ``async_ground``; passing both ``async_ground=True`` and
-        ``async_depth=0`` is a conflict and raises.
+        ``async_depth=0`` is a conflict and raises; negative depths
+        raise.
+    ingest_overlap : ``True`` round-pipelines ingest itself: a round's
+        dedup/cap/counting *results* stay on device as a deferred tail
+        while the foreground returns, and round k+1's frame prep is
+        dispatched BEFORE round k's tail is resolved — so round k's
+        device compute runs behind round k+1's dispatch work. All
+        device->host syncs (dedup assign/rep gather, the fleet-wide
+        ``roi_std`` copy, counting results, the on-mesh window-cap
+        round-trip) become deferred fetches resolved at the round's
+        Aggregate/recount boundary: the next ``ingest()``, any contact
+        round, ``results()``/``finalize()``/``summary()``, or a clean
+        ``__exit__``. Ledger interaction is double-buffered exactly like
+        the recount pipeline's snapshot-at-dispatch: at most one round's
+        ledger tail plus one round's counting fetches are ever pending,
+        and a pending tail always resolves before any later ledger op
+        on the same lanes — per-lane float64 op order is preserved, so
+        output is bit-equal to ``False`` (test-enforced at 0.0 for all
+        five policies x engine/reference x recount depths 0-2, incl.
+        under fault plans). ``False`` (default) keeps every sync inline.
     contact_reference : ``True`` pins EVERY contact round (including the
         ``finalize`` flush) to the scalar FIFO-loop reference path —
         the parity oracle / bench baseline of the batched planner.
@@ -158,7 +177,8 @@ class Fleet:
                  async_ground: bool = False, contact_reference: bool = False,
                  faults: Optional[FaultPlan] = None,
                  watchdog_s: Optional[float] = None,
-                 async_depth: Optional[int] = None):
+                 async_depth: Optional[int] = None,
+                 ingest_overlap: bool = False):
         if isinstance(pcfg, (list, tuple)):
             pcfgs = list(pcfg)
             if n_sats is not None and n_sats != len(pcfgs):
@@ -192,6 +212,16 @@ class Fleet:
         self._batchable = [self._can_batch(m) for m in self.missions]
         self._contact_batchable = [self._can_batch_contact(m)
                                    for m in self.missions]
+        if async_depth is not None and int(async_depth) < 0:
+            raise ValueError(
+                f"Fleet: async_depth must be >= 0 (0 = synchronous "
+                f"recount, k = up to k rounds' recounts in flight), "
+                f"got {async_depth}")
+        if not isinstance(ingest_overlap, bool) and ingest_overlap < 0:
+            raise ValueError(
+                f"Fleet: ingest_overlap must be a bool (True = defer "
+                f"each round's device->host fetches behind the next "
+                f"round's dispatch), got {ingest_overlap}")
         if async_depth is not None and async_ground and int(async_depth) == 0:
             raise ValueError(
                 "async_ground=True conflicts with async_depth=0 "
@@ -200,6 +230,19 @@ class Fleet:
                                             watchdog_s=watchdog_s,
                                             depth=async_depth)
         self.contact_reference = bool(contact_reference)
+        self.ingest_overlap = bool(ingest_overlap)
+        # ingest pipeline state: at most ONE round's ledger tail (dedup
+        # fetch + aggregation/compute charges + count dispatch) and one
+        # round's counting fetches are pending at any time — the
+        # double-buffered round snapshot mirroring the recount pipeline
+        self._ingest_tail = None          # (finish_fn, dispatch_time)
+        self._pending_counts: List[Tuple] = []  # [(fetch_fn, dispatch_time)]
+        self._ingest_rounds_deferred = 0
+        # per-stage ingest timing (summary() S-invariant:
+        # host_fetch_s <= device_compute_s, both 0.0 when synchronous)
+        self._ingest_dispatch_s = 0.0  # foreground dispatch wall
+        self._device_compute_s = 0.0   # cumulative deferred in-flight wall
+        self._host_fetch_s = 0.0       # foreground wall blocked resolving
         self._ingest_s = 0.0       # cumulative ingest wall time
         self._tiles_ingested = 0   # for summary() throughput
         self._contact_s = 0.0      # cumulative contact-round wall time
@@ -237,8 +280,15 @@ class Fleet:
         overrides its harvest grant (eclipse/sunlit profiles). Returns
         per-satellite :class:`IngestReport`\\ s identical to calling
         ``Mission.ingest`` satellite by satellite.
+
+        With ``ingest_overlap=True`` the returned reports' deferred
+        fields (``tiles_processed_space``, ``energy_remaining_j``) are
+        finalized at the round's resolution boundary — the next
+        ``ingest``/contact/``results`` call — while the eager fields
+        (``n_tiles``, grants, entitlements) are always final on return.
         """
         t0 = time.perf_counter()
+        fetch0 = self._host_fetch_s
         if len(frames_per_sat) != self.n_sats:
             raise ValueError(
                 f"expected {self.n_sats} frame lists, got {len(frames_per_sat)}")
@@ -259,6 +309,13 @@ class Fleet:
         batched = [i for i in range(self.n_sats)
                    if self._batchable[i] and frames_per_sat[i]
                    and i not in blackouts]
+        if self._ingest_tail is not None and len(batched) < self.n_sats:
+            # some satellite takes the sequential Mission path this
+            # round (empty pass, custom graph, blackout): its ledger ops
+            # must come AFTER the pending round's deferred charges on
+            # the same lanes, so the tail resolves before the loop —
+            # frame prep of fully-batched rounds still overlaps it
+            self._resolve_ingest_tail()
         for i in range(self.n_sats):
             if i in blackouts:
                 # satellite brownout: the pass is skipped entirely (zero
@@ -275,7 +332,12 @@ class Fleet:
             self._ingest_batched(batched, frames_per_sat, energy_budgets_j,
                                  reports)
         self._ingest_round += 1
-        self._ingest_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._ingest_s += dt
+        # dispatch time = this call's wall minus whatever it spent
+        # blocked resolving deferred fetches (0 in synchronous mode)
+        self._ingest_dispatch_s += max(
+            dt - (self._host_fetch_s - fetch0), 0.0)
         self._tiles_ingested += sum(r.n_tiles for r in reports
                                     if r is not None)
         return reports  # type: ignore[return-value]
@@ -284,6 +346,8 @@ class Fleet:
                         reports):
         sp_size = self.space[1].input_size
         gd_size = self.ground[1].input_size
+        overlap = self.ingest_overlap
+        t_dispatch = time.perf_counter()
 
         # --- Capture.prepare: shared frame buckets across the fleet ---
         segs: Dict[int, Segment] = {}
@@ -301,7 +365,8 @@ class Fleet:
                     and self.missions[i].policy.wants_dedup) for i in ids)
             preps = engine.prepare_frames_multi(
                 [frames_per_sat[i] for i in ids], tile_size, sp_size, gd_size,
-                sharding=self.sharding, with_stats=stats)
+                sharding=self.sharding, with_stats=stats,
+                defer_stats=overlap)
             for i, prep in zip(ids, preps):
                 seg = Segment(frames=list(frames_per_sat[i]),
                               energy_grant_override=energy_budgets_j[i])
@@ -309,6 +374,18 @@ class Fleet:
                 seg.tiles_sp, seg.tiles_gd = prep.tiles_sp, prep.tiles_gd
                 seg.true, seg.n = prep.true, prep.n
                 segs[i] = seg
+
+        if overlap:
+            # double-buffered round boundary: the PREVIOUS round's
+            # deferred tail resolves only now — with this round's frame
+            # buckets already enqueued behind its programs on the device
+            # — and strictly before this round's grants, so every lane's
+            # float64 ledger sequence is the synchronous one. Counting
+            # fetches dispatched by that tail's predecessor drain first
+            # (they touch no ledger; draining bounds pending work at one
+            # round of counts + one tail).
+            self._drain_count_fetches()
+            self._resolve_ingest_tail()
 
         # --- Capture.admit, with the ledger ops lifted out: the fleet
         # grants every satellite's entitlement in one vectorized op ---
@@ -322,23 +399,54 @@ class Fleet:
         self.ledger.grant(evec)
         self.ledger.charge_capture(fvec)
 
-        # --- RoiFilter: per-satellite host masks over the fused stats ---
+        # --- RoiFilter: per-satellite host masks over the fused stats
+        # (under overlap, roi_std is a lazy device slice — materialized
+        # here only for satellites whose policy actually reads it) ---
         for i in sats:
             m, seg = self.missions[i], segs[i]
+            if overlap:
+                self._materialize_roi(m, seg)
             m.ingest_stages[1].run(m, seg)  # RoiFilter
         # --- Dedup: one vmapped multi-sat core call per shape bucket
         # (strict_parity falls back to the sequential per-sat core) ---
+        dedup_fetch = nops = None
         if self.strict_parity:
             for i in sats:
                 m, seg = self.missions[i], segs[i]
                 m.ingest_stages[2].run(m, seg)  # Dedup (charges aggregate)
+        elif overlap:
+            dedup_fetch, nops = self._dedup_batched(sats, segs, defer=True)
         else:
             self._dedup_batched(sats, segs)
 
         # --- OnboardCount: fleet-shared fixed-shape counting batches ---
-        self._onboard_count_batched([i for i in sats
-                                     if self.missions[i].policy.wants_onboard],
-                                    segs)
+        count_sats = [i for i in sats
+                      if self.missions[i].policy.wants_onboard]
+        if overlap:
+            def finish():
+                # the deferred round tail — runs at the next resolution
+                # boundary. Ledger op order per lane matches the
+                # synchronous path exactly: charge_aggregate lands
+                # before the cap read + charge_compute, and the whole
+                # tail lands before any LATER round's grant.
+                if nops is not None:
+                    self.ledger.charge_aggregate(nops)
+                # dispatch the on-mesh cap program now so its round-trip
+                # rides behind the dedup-result wait (remaining is final
+                # for this round: charge_aggregate just landed)
+                caps_resolver = self._dispatch_caps(count_sats)
+                if dedup_fetch is not None:
+                    dedup_fetch()  # seg.rep_of writes (no ledger)
+                self._onboard_count_batched(count_sats, segs, defer=True,
+                                            caps_resolver=caps_resolver)
+                for i in sats:
+                    m, seg = self.missions[i], segs[i]
+                    reports[i].tiles_processed_space = seg.n_processed
+                    reports[i].energy_remaining_j = m.ledger.remaining
+            self._ingest_tail = (finish, t_dispatch)
+            self._ingest_rounds_deferred += 1
+        else:
+            self._onboard_count_batched(count_sats, segs)
 
         for i in sats:
             m, seg = self.missions[i], segs[i]
@@ -352,13 +460,78 @@ class Fleet:
                 energy_remaining_j=m.ledger.remaining,
                 byte_entitlement=seg.byte_entitlement)
 
-    def _dedup_batched(self, sats, segs):
+    # -- ingest-overlap resolution boundaries ------------------------------
+
+    def _resolve_ingest_tail(self):
+        """Run the previous round's deferred ledger/fetch tail (no-op
+        when nothing is pending). Cleared before running so a raising
+        tail can never re-fire at the next boundary."""
+        tail = self._ingest_tail
+        if tail is None:
+            return
+        self._ingest_tail = None
+        fn, t_disp = tail
+        t1 = time.perf_counter()
+        fn()
+        t2 = time.perf_counter()
+        self._host_fetch_s += t2 - t1
+        self._device_compute_s += t2 - t_disp
+
+    def _drain_count_fetches(self):
+        """Resolve every parked counting-batch fetch. These touch no
+        ledger lanes, so drain order is free — but draining before the
+        tail resolves bounds pending work at one round's counts plus
+        one round's tail."""
+        pend, self._pending_counts = self._pending_counts, []
+        for fn, t_disp in pend:
+            t1 = time.perf_counter()
+            fn()
+            t2 = time.perf_counter()
+            self._host_fetch_s += t2 - t1
+            self._device_compute_s += t2 - t_disp
+
+    def _resolve_ingest_pending(self):
+        """Full resolution boundary: tail first (it dispatches this
+        round's counting batches), then all parked count fetches.
+        Called by GroundSegment entry points, results(), and summary()
+        so no reader ever observes a half-finished round."""
+        self._resolve_ingest_tail()
+        self._drain_count_fetches()
+
+    def _materialize_roi(self, m, seg):
+        """Fetch a satellite's deferred ``roi_std`` device slice to host
+        (overlap mode hands out lazy slices from the fused stats
+        program). Only satellites whose policy actually reads ROI pay
+        the copy; the blocked time counts as both host-fetch and
+        device-compute wall (the fetch IS the in-flight window here)."""
+        prep = getattr(seg, "prep", None)
+        if prep is None or prep.roi_std is None:
+            return
+        if isinstance(prep.roi_std, np.ndarray):
+            return
+        if not (m.pcfg.use_roi and m.policy.wants_roi) or not seg.n:
+            return
+        t1 = time.perf_counter()
+        prep.roi_std = np.asarray(prep.roi_std)
+        t2 = time.perf_counter()
+        self._host_fetch_s += t2 - t1
+        self._device_compute_s += t2 - t1
+
+    def _dedup_batched(self, sats, segs, defer=False):
         """Mission.Dedup semantics with the per-satellite k-means loop
         lifted into :func:`repro.core.dedup.dedup_multi`: every
         satellite's padded moment gather joins ONE vmapped core call per
         shape bucket (placed along the ``sats`` mesh axis when sharded).
         Skip conditions, cluster counts, gathers, keys, and the
-        aggregation charge are exactly the sequential stage's."""
+        aggregation charge are exactly the sequential stage's.
+
+        With ``defer=True`` the core call is dispatched but the
+        device->host fetch and ``seg.rep_of`` writes move into a
+        returned closure, and the aggregation charge is NOT applied here
+        — the caller charges ``nops`` (second return value) itself so
+        the ledger op can land before the fetch blocks. Returns
+        ``(fetch_fn, nops)``, both ``None`` when no satellite deduped.
+        """
         parts, ids = [], []
         nops = np.zeros(self.ledger.n_lanes, np.float64)
         for i in sats:
@@ -372,23 +545,53 @@ class Fleet:
             n_act = len(idx_active)
             idx_pad = np.zeros(dd.dedup_pad_size(n_act), np.int64)
             idx_pad[:n_act] = idx_active
-            parts.append((seg.prep.moments[jnp.asarray(idx_pad)], k,
+            parts.append((seg.prep.moments[xfer.device_constant(idx_pad)], k,
                           jax.random.PRNGKey(pcfg.seed), n_act))
             ids.append((i, idx_active))
             nops[i] = n_act
         if not parts:
-            return
+            return (None, None) if defer else None
         results = dd.dedup_multi(parts, sharding=self.sharding)
-        for (i, idx_active), res in zip(ids, results):
-            seg = segs[i]
-            assign = np.asarray(res.assign)
-            rep_local = np.asarray(res.rep_idx)
-            seg.rep_of[idx_active] = idx_active[rep_local[assign]]
-        self.ledger.charge_aggregate(nops)
 
-    def _onboard_count_batched(self, sats, segs):
+        def fetch():
+            for (i, idx_active), res in zip(ids, results):
+                seg = segs[i]
+                assign = np.asarray(res.assign)
+                rep_local = np.asarray(res.rep_idx)
+                seg.rep_of[idx_active] = idx_active[rep_local[assign]]
+        if defer:
+            return fetch, nops
+        fetch()
+        self.ledger.charge_aggregate(nops)
+        return None
+
+    def _dispatch_caps(self, sats):
+        """Enqueue the uniform-profile on-mesh energy-cap program and
+        return its deferred resolver (``None`` when the fleet has
+        heterogeneous pricing, or nothing to count — the per-satellite
+        fallback in :meth:`_onboard_count_batched` covers those)."""
+        if not sats:
+            return None
+        profiles = {(self.missions[i].gflops_space,
+                     self.missions[i].pcfg.hardware) for i in sats}
+        if len(profiles) != 1:
+            return None
+        (gflops, hw), = profiles
+        return max_tiles_within_budget_vec(self.ledger.remaining * 0.95,
+                                           gflops, hw,
+                                           sharding=self.sharding, defer=True)
+
+    def _onboard_count_batched(self, sats, segs, defer=False,
+                               caps_resolver=None):
         """Mission.OnboardCount semantics, with every satellite's
-        energy-capped representative set counted in shared batches."""
+        energy-capped representative set counted in shared batches.
+
+        ``caps_resolver`` (from :meth:`_dispatch_caps`) supplies the
+        uniform energy caps from an already-in-flight device program.
+        With ``defer=True`` the rep selection and compute charge still
+        happen eagerly (they feed the ledger and reports), but each
+        counting batch's device->host fetch is parked on
+        ``self._pending_counts`` for a later resolution boundary."""
         if not sats:
             return
         # energy caps and compute spends are vectorized over the stacked
@@ -401,9 +604,10 @@ class Fleet:
         caps = None
         if uniform:
             (gflops, hw), = profiles
-            caps = max_tiles_within_budget_vec(self.ledger.remaining * 0.95,
-                                               gflops, hw,
-                                               sharding=self.sharding)
+            caps = (caps_resolver() if caps_resolver is not None else
+                    max_tiles_within_budget_vec(self.ledger.remaining * 0.95,
+                                                gflops, hw,
+                                                sharding=self.sharding))
         process: Dict[int, np.ndarray] = {}
         nproc = np.zeros(self.ledger.n_lanes, np.float64)
         for i in sats:
@@ -431,19 +635,32 @@ class Fleet:
         params, cfg = self.space
         for thresh, ids in by_thresh.items():
             parts = [(segs[i].tiles_sp, process[i]) for i in ids]
-            results = count_tiles_multi(params, cfg, parts,
-                                        score_thresh=thresh,
-                                        sharding=self.sharding)
-            for i, (c, f) in zip(ids, results):
-                seg = segs[i]
-                counts_sp = np.zeros(seg.n)
-                conf = np.full(seg.n, -1.0)
-                if seg.n_processed:
-                    counts_sp[process[i]] = c
-                    conf[process[i]] = f
-                seg.counts_sp = counts_sp[seg.rep_of]
-                seg.conf = conf[seg.rep_of]
-                seg.processed = np.isin(seg.rep_of, process[i]) & seg.active
+            out = count_tiles_multi(params, cfg, parts, score_thresh=thresh,
+                                    sharding=self.sharding, defer=defer)
+            if defer:
+                # `out` is the resolve closure: the batch is enqueued on
+                # the device; the single host fetch + write-back parks
+                # until a resolution boundary (no ledger ops inside)
+                self._pending_counts.append((
+                    lambda resolve=out, ids=ids, process=process:
+                        self._apply_counts(ids, segs, process, resolve()),
+                    time.perf_counter()))
+            else:
+                self._apply_counts(ids, segs, process, out)
+
+    def _apply_counts(self, ids, segs, process, results):
+        """Write one counting batch's (counts, conf) back onto its
+        segments — identical to the sequential stage's scatter."""
+        for i, (c, f) in zip(ids, results):
+            seg = segs[i]
+            counts_sp = np.zeros(seg.n)
+            conf = np.full(seg.n, -1.0)
+            if seg.n_processed:
+                counts_sp[process[i]] = c
+                conf[process[i]] = f
+            seg.counts_sp = counts_sp[seg.rep_of]
+            seg.conf = conf[seg.rep_of]
+            seg.processed = np.isin(seg.rep_of, process[i]) & seg.active
 
     def _resolve_plan(self, windows, stations, budget_bytes, plan
                       ) -> ContactPlan:
@@ -607,7 +824,11 @@ class Fleet:
     def close(self) -> None:
         """Tear down without surfacing deferred-recount results or
         errors (delegates to :meth:`GroundSegment.close`): idempotent,
-        never raises, never leaks a worker thread."""
+        never raises, never leaks a worker thread. Any ingest-overlap
+        tail or parked count fetches are DROPPED, not resolved —
+        teardown never runs deferred work that could raise."""
+        self._ingest_tail = None
+        self._pending_counts = []
         self.ground_segment.close()
 
     def __enter__(self) -> "Fleet":
@@ -636,7 +857,18 @@ class Fleet:
         (cumulative wall time of :meth:`ingest` calls), and the
         contact-tier mirror — cumulative :meth:`contact_round` wall
         time, window/byte throughput, and the overlapped-recount
-        accounting of the :class:`~repro.core.contact.GroundSegment`."""
+        accounting of the :class:`~repro.core.contact.GroundSegment`.
+
+        Ingest-pipeline stage timings mirror the recount tier's:
+        ``ingest_dispatch_s`` is foreground wall spent enqueuing device
+        work, ``host_fetch_s`` is foreground wall blocked on deferred
+        device->host copies, ``device_compute_s`` is the cumulative
+        dispatch->resolution in-flight window those copies rode in, and
+        ``ingest_hidden_frac = 1 - host_fetch_s/device_compute_s`` is
+        the fraction of deferred-work wall hidden behind later
+        dispatch. Side-effect-free: resolving pending work is the same
+        resolution every reader forces, so two consecutive calls return
+        equal dicts."""
         rs = self.results()
         tps = (self._tiles_ingested / self._ingest_s
                if self._ingest_s > 0 else 0.0)
@@ -644,6 +876,12 @@ class Fleet:
         assert gseg.wait_s <= gseg.recount_s, (
             f"recount accounting invariant broken: wait_s={gseg.wait_s} "
             f"> recount_s={gseg.recount_s}")
+        assert self._host_fetch_s <= self._device_compute_s, (
+            f"ingest accounting invariant broken: host_fetch_s="
+            f"{self._host_fetch_s} > device_compute_s="
+            f"{self._device_compute_s}")
+        hidden = (max(1.0 - self._host_fetch_s / self._device_compute_s, 0.0)
+                  if self._device_compute_s > 0 else 0.0)
         bytes_spent = float(self.ledger.bytes_spent[:self.n_sats].sum())
         return {
             "n_sats": self.n_sats,
@@ -652,6 +890,12 @@ class Fleet:
             "ingest_s": self._ingest_s,
             "tiles_per_s": tps,
             "tiles_per_s_per_sat": tps / self.n_sats,
+            "ingest_overlap": self.ingest_overlap,
+            "ingest_rounds_deferred": self._ingest_rounds_deferred,
+            "ingest_dispatch_s": self._ingest_dispatch_s,
+            "device_compute_s": self._device_compute_s,
+            "host_fetch_s": self._host_fetch_s,
+            "ingest_hidden_frac": hidden,
             "contact_s": self._contact_s,
             "windows_served": self._windows_served,
             "windows_per_s": (self._windows_served / self._contact_s
@@ -687,7 +931,8 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
                  async_ground: bool = False, contact_reference: bool = False,
                  faults: Optional[FaultPlan] = None,
                  watchdog_s: Optional[float] = None,
-                 async_depth: Optional[int] = None):
+                 async_depth: Optional[int] = None,
+                 ingest_overlap: bool = False):
     """Execute a :class:`~repro.data.scenarios.FleetScenario`.
 
     ``fleet=True`` runs the constellation-batched :class:`Fleet` path
@@ -697,8 +942,11 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
     additionally overlaps every round's ground recount with the next
     round's ingest (``async_depth=k`` generalizes that to a bounded
     pipeline holding up to ``k`` rounds' recounts in flight — bit-equal
-    at every depth), and ``contact_reference=True`` swaps the batched
-    planner for the scalar FIFO-loop reference (the bench baseline).
+    at every depth), ``ingest_overlap=True`` round-pipelines ingest
+    itself (each round's device->host fetches defer behind the next
+    round's dispatch — bit-equal to the synchronous path), and
+    ``contact_reference=True`` swaps the batched planner for the scalar
+    FIFO-loop reference (the bench baseline).
     ``fleet=False`` runs the looped-Mission parity oracle — one
     sequential ``Mission`` per satellite fed the identical event order.
     Returns ``(per_sat_results, driver)`` where ``driver`` is the Fleet
@@ -719,7 +967,8 @@ def run_scenario(space, ground, pcfg, scenario, *, fleet: bool = True,
                    mesh=mesh, strict_parity=strict_parity,
                    async_ground=async_ground,
                    contact_reference=contact_reference, faults=faults,
-                   watchdog_s=watchdog_s, async_depth=async_depth)
+                   watchdog_s=watchdog_s, async_depth=async_depth,
+                   ingest_overlap=ingest_overlap)
         for rnd in scenario.rounds:
             fl.ingest(rnd.frames_per_sat(n), rnd.harvest_per_sat(n))
             if rnd.contacts:

@@ -86,10 +86,15 @@ class FleetSharding:
     byte on its pre-sharding code path.
     """
 
-    __slots__ = ("mesh",)
+    __slots__ = ("mesh", "_placements")
 
     def __init__(self, mesh: Optional[Mesh] = None):
         self.mesh = mesh
+        # NamedSharding cache, one entry per ndim: the placement spec is
+        # a pure function of (mesh, ndim), but building it per call made
+        # every round's device_put re-derive sharding metadata — real
+        # churn at fleet scale (hundreds of placements per round)
+        self._placements: dict = {}
 
     @property
     def on_mesh(self) -> bool:
@@ -107,13 +112,25 @@ class FleetSharding:
     def spec(self, ndim: int) -> P:
         return P(*((SATS_AXIS,) + (None,) * (ndim - 1)))
 
+    def placement(self, ndim: int) -> NamedSharding:
+        """The cached ``NamedSharding`` for an ndim-dimensional array
+        (built once per ndim per mesh, reused every round)."""
+        s = self._placements.get(ndim)
+        if s is None:
+            s = NamedSharding(self.mesh, self.spec(ndim))
+            self._placements[ndim] = s
+        return s
+
     def device_put(self, arr):
         """Place ``arr`` with its (device-multiple) leading axis split
-        along ``sats``; identity off-mesh."""
+        along ``sats``; identity off-mesh. Every real placement is
+        counted in :mod:`repro.core.xfer`'s transfer ledger (the
+        count-based churn gate in the fleet bench)."""
         if self.mesh is None:
             return arr
-        return jax.device_put(arr, NamedSharding(self.mesh,
-                                                 self.spec(arr.ndim)))
+        from repro.core import xfer
+        xfer.record_transfer()
+        return jax.device_put(arr, self.placement(arr.ndim))
 
     def shard(self, arr):
         """Zero-pad the leading axis to a device multiple and place it.

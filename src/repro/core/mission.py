@@ -224,7 +224,10 @@ class RoiFilter(Stage):
         if not (pcfg.use_roi and mission.policy.wants_roi) or seg.n == 0:
             return
         if seg.prep is not None:
-            raw_sd = seg.prep.roi_std  # stddev moment from the fused program
+            # stddev moment from the fused program; np.asarray is free
+            # for the host copy and materializes a still-deferred device
+            # slice (engine defer_stats) exactly here
+            raw_sd = np.asarray(seg.prep.roi_std)
         else:
             raw_sd = np.asarray(jnp.mean(jnp.std(jnp.asarray(seg.tiles_sp),
                                                  axis=(1, 2)), axis=-1))
