@@ -539,6 +539,57 @@ def _overlap_sweep(rows, report):
     return row
 
 
+def _jitguard_sweep(rows, report):
+    """Runtime jit-recompilation sanitizer: drive identical fleet
+    ingest rounds under :class:`repro.analysis.JitGuard` and record the
+    XLA compilations each round triggers. Round 1 traces and compiles
+    the programs; every later round re-presents bit-identical shapes,
+    so rounds >= 2 must compile ZERO new programs. Count-based and
+    machine-independent (like the transfer-cache churn gate), so the
+    gate is enforced everywhere — a single recompile in steady state is
+    the shape-churn class PR 9 eliminated. ``FLEET_BENCH_JITGUARD_SATS=0``
+    disables; on jax builds with no compilation-count source the gate
+    reports null."""
+    from benchmarks.common import counters
+    from repro.analysis.jitguard import JitGuard
+    from repro.core.fleet import Fleet
+    from repro.core.pipeline import PipelineConfig
+    from repro.data.scenarios import generate_scenario
+
+    n_sats = int(os.environ.get("FLEET_BENCH_JITGUARD_SATS", "4"))
+    n_rounds = max(2, int(os.environ.get("FLEET_BENCH_JITGUARD_ROUNDS", "4")))
+    if n_sats <= 0:
+        return None
+    space, ground = counters()
+    pcfg = PipelineConfig(method="targetfuse", score_thresh=0.25)
+    sc = generate_scenario(_spec_for(n_sats, seed=9))
+    rnd = sc.rounds[0]
+    frames = rnd.frames_per_sat(n_sats)
+    harvest = rnd.harvest_per_sat(n_sats)
+    fl = Fleet(space, ground, pcfg, n_sats=n_sats)
+
+    per_round, mode = [], "unsupported"
+    for k in range(n_rounds):
+        with JitGuard(f"fleet round {k + 1}") as g:
+            fl.ingest(frames, harvest)
+        mode = g.mode
+        per_round.append(g.compilations if g.supported else None)
+    fl.finalize()
+
+    supported = mode != "unsupported"
+    steady = sum(per_round[1:]) if supported else None
+    row = {
+        "n_sats": n_sats, "rounds": n_rounds, "counter_mode": mode,
+        "recompiles_per_round": per_round,
+        "warmup_round_compiles": per_round[0],
+        "steady_rounds_compiles": steady,
+    }
+    report["jitguard"] = row
+    rows.append(("fleet_jitguard", 0.0,
+                 f"mode={mode} warmup={per_round[0]} steady={steady}"))
+    return row
+
+
 def _floats_from_env(name, default):
     env = os.environ.get(name, "")
     if not env:
@@ -866,6 +917,7 @@ def run(json_path: str = None):
     depth = _depth_sweep(rows, report)
     orbital = _orbital_sweep(rows, report)
     overlap = _overlap_sweep(rows, report)
+    jitg = _jitguard_sweep(rows, report)
     faults = _faults_sweep(rows, report)
     shard_dev = _devices_sweep(rows, report)
 
@@ -941,6 +993,17 @@ def run(json_path: str = None):
         "gate_transfer_cache": (
             overlap["repeat_round_device_puts"]
             < overlap["pre_cache_round_puts"] if overlap else None),
+        "jit_recompiles_per_round": (jitg["recompiles_per_round"]
+                                     if jitg else None),
+        "jit_steady_rounds_compiles": (jitg["steady_rounds_compiles"]
+                                       if jitg else None),
+        "jit_counter_mode": jitg["counter_mode"] if jitg else None,
+        # count-based, so machine-independent: enforced EVERYWHERE
+        # (null only when disabled or the jax build exposes no counter)
+        "gate_jit_steady_state": (
+            jitg["steady_rounds_compiles"] == 0
+            if jitg and jitg["steady_rounds_compiles"] is not None
+            else None),
         "depth_pred_max_dev": depth["pred_max_dev"] if depth else None,
         "depth_hidden_fracs": (
             {d: v["hidden_frac"] for d, v in depth["per_depth"].items()}
@@ -1013,6 +1076,14 @@ def run(json_path: str = None):
             f"{overlap['repeat_round_device_puts']} device_puts, not fewer "
             f"than the pre-cache engine's "
             f"{overlap['pre_cache_round_puts']} (see {json_path})")
+    if report["_summary"]["gate_jit_steady_state"] is False:
+        raise AssertionError(
+            f"jit steady-state gate: rounds >= 2 of an identical-shape "
+            f"fleet ingest compiled "
+            f"{jitg['steady_rounds_compiles']} new XLA program(s) "
+            f"(per-round {jitg['recompiles_per_round']}) — shape churn "
+            f"is back; every steady-state round must hit the jit cache "
+            f"(see {json_path})")
     if report["_summary"]["gate_ingest_hidden"] is False:
         raise AssertionError(
             f"ingest overlap gate: hidden fraction "

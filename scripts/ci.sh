@@ -15,6 +15,22 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 pip install -r requirements-dev.txt 2>/dev/null || \
   echo "(offline: property tests run on the fallback mini runner)"
 
+# Hard gate: project-specific static analysis (thread-ownership races,
+# host-sync-in-hot-path, determinism lints). Exits nonzero on any
+# finding not waived in-source or carried by analysis_baseline.json.
+echo "== static analysis (python -m repro.analysis) =="
+python -m repro.analysis
+
+# Best-effort: generic lint (unused imports, undefined names). The
+# baked image may not ship ruff — requirements-dev pins it for
+# environments that can install.
+if command -v ruff >/dev/null 2>&1; then
+  echo "== ruff (pinned, minimal rule set from pyproject.toml) =="
+  ruff check src
+else
+  echo "(ruff unavailable: generic lint skipped; repro.analysis ran above)"
+fi
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
@@ -68,8 +84,9 @@ XLA_FLAGS="--xla_force_host_platform_device_count=2" \
 
 echo "== fleet bench smoke (tiny config, incl. sharded-path parity gate,"
 echo "   the contact-plan batched/reference/async parity gate, the depth"
-echo "   sweep, the ingest-overlap arms + transfer-cache churn gate, and"
-echo "   the fault-sweep retry/watchdog parity gates) =="
+echo "   sweep, the ingest-overlap arms + transfer-cache churn gate, the"
+echo "   jitguard steady-state recompilation gate, and the fault-sweep"
+echo "   retry/watchdog parity gates) =="
 FLEET_BENCH_SATS=2 FLEET_BENCH_ROUNDS=1 FLEET_BENCH_ITERS=1 \
   FLEET_BENCH_DEVICES=1,2 FLEET_BENCH_SHARD_SATS=3 \
   FLEET_BENCH_STATIONS=2 FLEET_BENCH_CONTACT_SATS=3 \

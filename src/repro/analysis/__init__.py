@@ -1,0 +1,12 @@
+"""repro.analysis — repo-specific static analysis + runtime sanitizers.
+
+Static rules (AST-based, run via ``python -m repro.analysis``):
+thread-ownership race checking for the ground-segment worker pipeline,
+host-sync-in-hot-path lints protecting PR 9's churn elimination, and
+determinism lints guarding the seeded-fault replay contract.  Runtime:
+:class:`~repro.analysis.jitguard.JitGuard` counts XLA compilations so
+benches/tests can assert steady-state rounds compile nothing.
+"""
+from repro.analysis.engine import (Finding, analyze, load_rules,  # noqa: F401
+                                   register)
+from repro.analysis.jitguard import JitGuard  # noqa: F401

@@ -1,0 +1,103 @@
+"""Runtime jit-recompilation sanitizer.
+
+The fleet engine's whole shape discipline — pow2 frame buckets,
+size-tiered counting batches, padded dedup cores — exists so that
+steady-state rounds re-dispatch *already-compiled* XLA programs.  A
+regression that lets a data-dependent shape reach a jit boundary shows
+up as a recompile per round: silent, correct, and catastrophically slow.
+:class:`JitGuard` counts XLA compilations inside a ``with`` block so
+benches and tests can assert the steady state compiles nothing:
+
+    with JitGuard() as g:
+        fleet.ingest(frames, harvest)          # round >= 2, fixed sizes
+    g.assert_steady_state("fleet round 3")     # raises if g.compilations
+
+Primary signal: ``jax.monitoring`` duration events — jax emits
+``/jax/core/compile/backend_compile_duration`` once per backend
+compilation (verified: cache hits emit nothing).  Fallback when the
+monitoring listener API is unavailable: the miss counter of jax's
+parameter-inference lru cache (``_infer_params_cached``), which grows
+exactly when a jitted call sees a novel (function, shapes) key.  The
+fallback over-approximates compilations (tracing-cache misses), which is
+safe for a zero-gate; ``mode`` records which signal counted.
+"""
+from __future__ import annotations
+
+import threading
+
+_COMPILE_EVENT_PREFIX = "/jax/core/compile/backend_compile"
+
+
+def _lru_misses() -> int:
+    from jax._src import pjit as _pjit
+    return int(_pjit._infer_params_cached.cache_info().misses)
+
+
+class JitGuard:
+    """Context manager counting XLA compilations in its dynamic extent.
+
+    Thread-safe: compilations from worker threads (the GroundSegment
+    recount pipeline) are counted too — the monitoring listener is
+    process-global and guarded by a lock.
+    """
+
+    def __init__(self, label: str = ""):
+        self.label = label
+        self.compilations = 0
+        self.mode: str = "inactive"
+        self._lock = threading.Lock()
+        self._active = False
+        self._cb = None
+        self._base = 0
+
+    def __enter__(self) -> "JitGuard":
+        self.compilations = 0
+        try:
+            import jax.monitoring as mon
+
+            def _on_duration(name: str, secs: float, **kw) -> None:
+                if self._active and name.startswith(_COMPILE_EVENT_PREFIX):
+                    with self._lock:
+                        self.compilations += 1
+
+            mon.register_event_duration_secs_listener(_on_duration)
+            self._cb = _on_duration
+            self.mode = "monitoring"
+        except Exception:
+            try:
+                self._base = _lru_misses()
+                self.mode = "lru-fallback"
+            except Exception:
+                self.mode = "unsupported"
+        self._active = True
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._active = False
+        if self.mode == "monitoring":
+            try:
+                from jax._src import monitoring as _impl
+                _impl._unregister_event_duration_listener_by_callback(
+                    self._cb)
+            except Exception:
+                pass  # listener stays registered but inert (_active False)
+            self._cb = None
+        elif self.mode == "lru-fallback":
+            self.compilations = max(0, _lru_misses() - self._base)
+        return False
+
+    @property
+    def supported(self) -> bool:
+        return self.mode in ("monitoring", "lru-fallback")
+
+    def assert_steady_state(self, what: str = "") -> None:
+        """Raise if the guarded block compiled any new XLA program."""
+        if not self.supported:
+            return
+        if self.compilations:
+            label = what or self.label or "guarded block"
+            raise AssertionError(
+                f"jitguard: {label} compiled {self.compilations} new XLA "
+                f"program(s); steady-state rounds must re-dispatch "
+                f"already-compiled programs only (shape churn reached a "
+                f"jit boundary — check pow2 bucketing / tier floors)")

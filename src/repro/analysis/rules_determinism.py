@@ -1,0 +1,100 @@
+"""Determinism lints for ``repro.core`` + ``repro.orbits``.
+
+The fault subsystem's replayability contract (PR 6) is that every
+random draw routes through a counter-hashed ``np.random.SeedSequence``
+keyed by (seed, kind, site) — order-independent and bit-replayable —
+and every other source of nondeterminism (process-global RNG state,
+wall-clock reads) stays out of the core.  These lints ban the footguns:
+
+- ``determinism/global-rng``   — ``np.random.seed(...)`` (process-global
+  state: one call anywhere silently reorders every later draw)
+- ``determinism/unseeded-rng`` — argless ``np.random.default_rng()`` /
+  ``np.random.SeedSequence()`` (fresh OS entropy per call)
+- ``determinism/random-module`` — the stdlib ``random`` module (global
+  Mersenne state; use a seeded numpy Generator)
+- ``determinism/wall-clock``   — ``time.time()`` (timing accumulators
+  use ``time.perf_counter``; wall-clock reads leak host time into
+  results — waive with a reason if one is genuinely wanted)
+- ``determinism/frozen-setattr`` — ``object.__setattr__`` on frozen
+  dataclasses outside ``__post_init__`` (mutating a "frozen" plan after
+  construction invalidates every validation it ran)
+
+Seeded constructors (``default_rng(0)``, ``default_rng(SeedSequence(
+(seed, kind) + site))``, ``jax.random.PRNGKey(seed)``) are fine — the
+ban is on *unseeded or global* state, not on randomness.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.engine import (Finding, ModuleContext, call_name,
+                                   enclosing_function, register)
+
+_SCOPES = ("repro/core/", "repro/orbits/")
+
+
+def _in_scope(rel: str) -> bool:
+    return any(s in rel for s in _SCOPES)
+
+
+@register
+def determinism_rule(ctx: ModuleContext) -> List[Finding]:
+    findings: List[Finding] = []
+    in_scope = _in_scope(ctx.rel)
+    for node in ast.walk(ctx.tree):
+        if in_scope and isinstance(node, (ast.Import, ast.ImportFrom)):
+            mod = (node.module if isinstance(node, ast.ImportFrom)
+                   else None)
+            names = [a.name for a in node.names]
+            if mod == "random" or "random" in names:
+                findings.append(ctx.finding(
+                    "determinism/random-module", node,
+                    "stdlib `random` uses process-global Mersenne state; "
+                    "use the counter-hashed SeedSequence discipline "
+                    "(repro.core.faults) or a seeded np.random Generator"))
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if not in_scope:
+            # the frozen-setattr lint applies tree-wide: a frozen plan
+            # is frozen no matter which package mutates it
+            if name == "object.__setattr__":
+                findings.extend(_check_setattr(ctx, node))
+            continue
+        if name in ("np.random.seed", "numpy.random.seed"):
+            findings.append(ctx.finding(
+                "determinism/global-rng", node,
+                "np.random.seed mutates process-global RNG state and "
+                "silently reorders every later draw; use a seeded "
+                "Generator or the faults.py SeedSequence discipline"))
+        elif (name in ("np.random.default_rng", "numpy.random.default_rng",
+                       "default_rng", "np.random.SeedSequence",
+                       "numpy.random.SeedSequence", "SeedSequence")
+              and not node.args and not node.keywords):
+            findings.append(ctx.finding(
+                "determinism/unseeded-rng", node,
+                f"argless {name}() draws fresh OS entropy per call — "
+                f"unreplayable; pass an explicit seed/entropy"))
+        elif name == "time.time":
+            findings.append(ctx.finding(
+                "determinism/wall-clock", node,
+                "time.time() leaks wall-clock into core results; timing "
+                "accumulators use time.perf_counter() — waive with a "
+                "reason if wall-clock is genuinely required"))
+        elif name == "object.__setattr__":
+            findings.extend(_check_setattr(ctx, node))
+    return findings
+
+
+def _check_setattr(ctx: ModuleContext, node: ast.Call) -> List[Finding]:
+    fn = enclosing_function(node)
+    if fn is not None and fn.name == "__post_init__":
+        return []
+    where = f"in `{fn.name}`" if fn is not None else "at module level"
+    return [ctx.finding(
+        "determinism/frozen-setattr", node,
+        f"object.__setattr__ {where}: frozen dataclasses may only be "
+        f"written during __post_init__ — post-construction mutation "
+        f"bypasses build-time validation")]

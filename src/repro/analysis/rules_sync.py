@@ -1,0 +1,271 @@
+"""Host-sync-in-hot-path lint.
+
+PR 9's churn elimination hinges on one discipline: inside the hot
+modules, device values stay on device until the *designated* transfer
+point.  A stray ``np.asarray`` / ``.item()`` / ``float()`` /
+``block_until_ready`` on a JAX value re-introduces a blocking
+device→host round-trip per call — exactly the per-round churn that
+erased the 32-sat batching margin before PR 9.
+
+The rule runs only over the designated hot scopes (``engine.py``, the
+``cascade`` count paths, ``dedup.py``, ``orbits/propagation.py``) and
+only flags syncs whose operand is *device-tainted*: produced by a
+``jnp.*``/``jax.*`` call, a ``jax.jit``-wrapped program, or a function
+that returns such a value (a module-level fixpoint infers those).
+Host-side ``np.asarray`` on parameters/python data is fine.  The
+designated single-copy transfer points carry explicit
+``# analysis: waive(host-sync): <reason>`` comments; everything else is
+a finding:
+
+- ``host-sync/asarray``  — ``np.asarray``/``np.array`` on a device value
+- ``host-sync/float``    — ``float()`` on a device value
+- ``host-sync/item``     — ``.item()`` on a device value
+- ``host-sync/block``    — any ``block_until_ready`` in a hot scope
+
+``repro.core.xfer`` is the sanctioned host→device direction and is
+never flagged (its *results* are device values like any other).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.engine import (Finding, ModuleContext, call_name,
+                                   register)
+
+# hot scopes: path suffix -> top-level function allowlist (None = whole
+# module). cascade is scoped to its count paths: the training/data-prep
+# helpers and the seed reference (count_tiles_batched_ref) are host code
+# by design.
+HOT_SCOPES: Dict[str, Optional[frozenset]] = {
+    "repro/core/engine.py": None,
+    "repro/core/cascade.py": frozenset({
+        "count_tiles", "_count_tiles_body", "_count_tiles_chunks",
+        "_count_forward", "count_tiles_batched", "count_tiles_multi",
+        "_tier_batch"}),
+    "repro/core/dedup.py": None,
+    "repro/orbits/propagation.py": None,
+}
+
+# cross-module device producers: jit-wrapped entry points a hot module
+# may call without seeing their jax.jit assignment
+EXTERNAL_PRODUCERS = frozenset({
+    "count_tiles", "count_tiles_batched", "count_tiles_multi",
+    "_count_forward", "_count_tiles_chunks", "propagate_jit",
+    "device_constant",
+})
+_DEVICE_ROOTS = ("jnp.", "jax.")
+
+
+def _scope_functions(rel: str) -> Optional[frozenset]:
+    for suffix, fns in HOT_SCOPES.items():
+        if rel.endswith(suffix):
+            return fns if fns is not None else frozenset({"*"})
+    return None
+
+
+def _rhs_mentions_jit(node: ast.AST) -> bool:
+    try:
+        return "jax.jit" in ast.unparse(node)
+    except Exception:
+        return False
+
+
+def _module_producers(tree: ast.Module) -> Set[str]:
+    """Names bound to jit programs plus (fixpoint) functions returning
+    device-tainted values."""
+    producers: Set[str] = set(EXTERNAL_PRODUCERS)
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and _rhs_mentions_jit(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    producers.add(t.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_rhs_mentions_jit(d) for d in node.decorator_list):
+                producers.add(node.name)
+    fns = [n for n in tree.body
+           if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for _ in range(4):  # fixpoint over return-taint
+        grew = False
+        for fn in fns:
+            if fn.name in producers:
+                continue
+            taint = _function_taint(fn, producers)
+            for n in ast.walk(fn):
+                if (isinstance(n, ast.Return) and n.value is not None
+                        and _tainted(n.value, taint, producers)):
+                    producers.add(fn.name)
+                    grew = True
+                    break
+        if not grew:
+            break
+    return producers
+
+
+def _tainted(expr: ast.AST, taint: Set[str], producers: Set[str]) -> bool:
+    """Conservative device-value test for an expression."""
+    if isinstance(expr, ast.Name):
+        return expr.id in taint
+    if isinstance(expr, ast.Call):
+        name = call_name(expr)
+        if name.startswith(_DEVICE_ROOTS):
+            return True
+        if name.rsplit(".", 1)[-1] in producers:
+            return True
+        # method chains on tainted receivers: x.at[i].set(v), x.astype(...)
+        if isinstance(expr.func, ast.Attribute):
+            return _tainted(expr.func.value, taint, producers)
+        return False
+    if isinstance(expr, ast.Attribute):
+        return _tainted(expr.value, taint, producers)
+    if isinstance(expr, ast.Subscript):
+        return _tainted(expr.value, taint, producers)
+    if isinstance(expr, ast.BinOp):
+        return (_tainted(expr.left, taint, producers)
+                or _tainted(expr.right, taint, producers))
+    if isinstance(expr, ast.UnaryOp):
+        return _tainted(expr.operand, taint, producers)
+    if isinstance(expr, ast.Compare):
+        return (_tainted(expr.left, taint, producers)
+                or any(_tainted(c, taint, producers)
+                       for c in expr.comparators))
+    if isinstance(expr, ast.IfExp):
+        return (_tainted(expr.body, taint, producers)
+                or _tainted(expr.orelse, taint, producers))
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return any(_tainted(e, taint, producers) for e in expr.elts)
+    if isinstance(expr, (ast.ListComp, ast.GeneratorExp, ast.SetComp)):
+        return (_tainted(expr.elt, taint, producers)
+                or any(_tainted(g.iter, taint, producers)
+                       for g in expr.generators))
+    if isinstance(expr, ast.Starred):
+        return _tainted(expr.value, taint, producers)
+    return False
+
+
+def _bound_names(target: ast.AST) -> List[str]:
+    return [n.id for n in ast.walk(target) if isinstance(n, ast.Name)]
+
+
+def _propagate(stmts, taint: Set[str], producers: Set[str]) -> None:
+    """One in-order pass growing the tainted-name set."""
+    for stmt in stmts:
+        if isinstance(stmt, ast.Assign):
+            if _tainted(stmt.value, taint, producers):
+                for t in stmt.targets:
+                    taint.update(_bound_names(t))
+        elif isinstance(stmt, ast.AugAssign):
+            if (_tainted(stmt.value, taint, producers)
+                    or _tainted(stmt.target, taint, producers)):
+                taint.update(_bound_names(stmt.target))
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None and _tainted(stmt.value, taint,
+                                                   producers):
+                taint.update(_bound_names(stmt.target))
+        elif isinstance(stmt, ast.For):
+            if _tainted(stmt.iter, taint, producers):
+                taint.update(_bound_names(stmt.target))
+            _propagate(stmt.body, taint, producers)
+            _propagate(stmt.orelse, taint, producers)
+        elif isinstance(stmt, (ast.While, ast.If)):
+            _propagate(stmt.body, taint, producers)
+            _propagate(stmt.orelse, taint, producers)
+        elif isinstance(stmt, ast.With):
+            _propagate(stmt.body, taint, producers)
+        elif isinstance(stmt, ast.Try):
+            _propagate(stmt.body, taint, producers)
+            for h in stmt.handlers:
+                _propagate(h.body, taint, producers)
+            _propagate(stmt.orelse, taint, producers)
+            _propagate(stmt.finalbody, taint, producers)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # closures see the enclosing taint minus their own params;
+            # their locals do not leak back out
+            inner = taint - {a.arg for a in stmt.args.args}
+            _propagate(stmt.body, inner, producers)
+
+
+def _function_taint(fn, producers: Set[str],
+                    seed: Optional[Set[str]] = None) -> Set[str]:
+    """Two propagation passes ≈ fixpoint for straight-line hot code."""
+    taint: Set[str] = set(seed or ()) - {a.arg for a in fn.args.args}
+    _propagate(fn.body, taint, producers)
+    _propagate(fn.body, taint, producers)
+    return taint
+
+
+def _local_producers(fn, producers: Set[str]) -> Set[str]:
+    """Nested defs whose returns are tainted count as producers too."""
+    out = set(producers)
+    for node in ast.walk(fn):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node is not fn and node.name not in out):
+            inner_taint = _function_taint(node, out)
+            for n in ast.walk(node):
+                if (isinstance(n, ast.Return) and n.value is not None
+                        and _tainted(n.value, inner_taint, out)):
+                    out.add(node.name)
+                    break
+    return out
+
+
+def _check_scope(ctx: ModuleContext, body, taint: Set[str],
+                 producers: Set[str], findings: List[Finding]) -> None:
+    for node in (n for s in body for n in ast.walk(s)):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        short = name.rsplit(".", 1)[-1]
+        if short == "block_until_ready":
+            findings.append(ctx.finding(
+                "host-sync/block", node,
+                "block_until_ready in a hot scope: route the fetch "
+                "through the designated transfer point or waive with a "
+                "reason"))
+        elif (name in ("np.asarray", "np.array", "numpy.asarray",
+                       "numpy.array") and node.args
+              and _tainted(node.args[0], taint, producers)):
+            findings.append(ctx.finding(
+                "host-sync/asarray", node,
+                f"{name} on a device value blocks on a device->host "
+                f"copy in a hot scope (PR 9 churn class): defer it to "
+                f"the designated transfer point or waive with a reason"))
+        elif (name == "float" and node.args
+              and _tainted(node.args[0], taint, producers)):
+            findings.append(ctx.finding(
+                "host-sync/float", node,
+                "float() on a device value forces a blocking host sync "
+                "in a hot scope"))
+        elif (short == "item" and isinstance(node.func, ast.Attribute)
+              and _tainted(node.func.value, taint, producers)):
+            findings.append(ctx.finding(
+                "host-sync/item", node,
+                ".item() on a device value forces a blocking host sync "
+                "in a hot scope"))
+
+
+@register
+def host_sync_rule(ctx: ModuleContext) -> List[Finding]:
+    scope = _scope_functions(ctx.rel)
+    if scope is None:
+        return []
+    findings: List[Finding] = []
+    producers = _module_producers(ctx.tree)
+    whole_module = "*" in scope
+    # module-level taint accumulates across the whole module body
+    module_taint: Set[str] = set()
+    module_stmts = [n for n in ctx.tree.body
+                    if not isinstance(n, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef,
+                                          ast.ClassDef))]
+    _propagate(module_stmts, module_taint, producers)
+    for node in ctx.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not whole_module and node.name not in scope:
+                continue
+            local = _local_producers(node, producers)
+            taint = _function_taint(node, local, seed=module_taint)
+            _check_scope(ctx, node.body, taint, local, findings)
+        elif whole_module and not isinstance(node, ast.ClassDef):
+            _check_scope(ctx, [node], module_taint, producers, findings)
+    return findings

@@ -61,7 +61,7 @@ def run_pipeline_legacy(frames, space, ground, pcfg: PipelineConfig,
     else:
         prep = None
         all_tiles_sp, all_tiles_gd, all_true = [], [], []
-        for img, boxes, classes in frames:
+        for img, boxes, _classes in frames:
             s = img.shape[0]
             all_true.append(tile_counts(boxes, s, pcfg.tile_size))
             all_tiles_sp.append(_prep_tiles(img, pcfg.tile_size, sp_cfg.input_size))

@@ -330,7 +330,7 @@ def _apply_corruption(fleet, ctx: FaultContext, served, p: int) -> None:
     after the step's charges, so each lane's float sequence is exactly
     the scalar drain's charge-then-refund pair."""
     r_sats, r_spends, r_bws = [], [], []
-    for slot, sat, m, window, segs in served:
+    for slot, sat, m, _window, segs in served:
         seg = segs[p]
         ow = int(ctx.orig_windows[slot])
         if len(seg.selection.downlink) and \

@@ -197,6 +197,8 @@ def _assemble(parts, frames, tile_size: int, roi_std=None,
     moments = pad(cat(2)) if with_stats else None
     if roi_std is None and with_stats:
         rs = pad(cat(3))[:n]
+        # analysis: waive(host-sync): the per-workload roi_std copy is the
+        # designed transfer point; defer_stats keeps it lazy on device
         roi_std = rs if defer_stats else np.asarray(rs)
     true = np.concatenate([
         tile_counts(boxes, np.shape(img)[0], tile_size)
@@ -267,6 +269,8 @@ def prepare_frames_multi(workloads, tile_size: int, sp_size: int,
         # defer_stats, no copy at all: workloads get lazy device slices
         roi_all = cat[3] if with_stats else None
         if with_stats and not defer_stats:
+            # analysis: waive(host-sync): ONE fleet-wide ROI-stat copy per
+            # ingest (see comment above); defer_stats elides it entirely
             roi_all = np.asarray(roi_all)
         out, pos = [], 0
         for w in workloads:

@@ -76,7 +76,6 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.core.dedup as dd

@@ -33,7 +33,7 @@ by tests/test_mission.py against the frozen oracle in
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 import jax
@@ -177,7 +177,7 @@ class Capture(Stage):
                 return np.asarray(tiling.resize_tiles(t, input_size))
 
             sp, gd, true = [], [], []
-            for img, boxes, classes in seg.frames:
+            for img, boxes, _classes in seg.frames:
                 true.append(tile_counts(boxes, img.shape[0], pcfg.tile_size))
                 sp.append(prep_tiles(img, sp_cfg.input_size))
                 gd.append(prep_tiles(img, gd_cfg.input_size))

@@ -1,0 +1,51 @@
+"""Fixture: the pre-PR-8 ground-segment watchdog worker, reconstructed.
+
+This is the bug class PR 8 fixed, kept as a regression target for the
+thread-ownership rule (never imported at runtime — parsed only). Two
+violations the rule must report:
+
+1. ``_recount_run`` writes back ``seg.counts_gd`` (and dispatches the
+   Aggregate stage) without ever checking ``cancel`` — a worker
+   abandoned by the watchdog keeps writing while the foreground's
+   recovery recount runs, racing it.
+2. ``_recount_job`` accumulates into ``self.recount_s``, a
+   foreground-owned accumulator, from the worker thread — the root of
+   the recovery double-count.
+"""
+import threading
+import time
+
+import numpy as np
+
+from repro.core.cascade import count_tiles_multi
+
+
+def _recount_run(fleet, work):
+    params, cfg = fleet.ground
+    for thresh, items in work.by_thresh.items():
+        parts = [(seg.tiles_gd, down) for _, seg, down in items]
+        results = count_tiles_multi(params, cfg, parts, score_thresh=thresh,
+                                    sharding=fleet.sharding)
+        for (m, seg, down), (c, _) in zip(items, results):
+            counts_gd = np.zeros(seg.n)
+            if len(down):
+                counts_gd[down] = c
+            seg.counts_gd = counts_gd[seg.rep_of]
+    for m, seg, window in work.agg:
+        m.contact_stages[3].run(m, seg, window)
+
+
+class GroundSegment:
+    def execute(self, rnd):
+        rnd.thread = threading.Thread(target=self._recount_job, args=(rnd,),
+                                      daemon=True)
+        rnd.thread.start()
+
+    def _recount_job(self, rnd):
+        t0 = time.perf_counter()
+        try:
+            _recount_run(self.fleet, rnd.work)
+        except BaseException as e:
+            rnd.err = e
+        finally:
+            self.recount_s += time.perf_counter() - t0

@@ -1,0 +1,14 @@
+"""Fixture: a banned per-round host sync in the hot engine module
+(parsed only, never imported). The ``np.asarray`` on a jit result is
+exactly the PR 9 churn class the host-sync rule must flag."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_frame_program = jax.jit(lambda x: jnp.square(x) + 1.0)
+
+
+def prepare_frames(frames):
+    dev = _frame_program(jnp.asarray(frames))
+    stats = np.asarray(dev)  # banned: blocking device->host sync per round
+    return stats.mean()

@@ -1,0 +1,17 @@
+"""Fixture: every determinism-lint violation class (parsed only)."""
+import random
+import time
+
+import numpy as np
+
+
+def draw(n):
+    np.random.seed(42)
+    rng = np.random.default_rng()
+    wall = time.time()
+    return rng.random(n), wall, random.random()
+
+
+class Plan:
+    def mutate(self):
+        object.__setattr__(self, "budget", 0.0)

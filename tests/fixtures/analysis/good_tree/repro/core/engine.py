@@ -1,0 +1,48 @@
+"""Fixture: hot-module code that passes — the one designated transfer
+point carries a reason-annotated waiver, and a worker thread honors the
+ownership map (parsed only, never imported)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import count_tiles_multi
+
+_frame_program = jax.jit(lambda x: jnp.square(x) + 1.0)
+
+
+def prepare_frames(frames):
+    dev = _frame_program(jnp.asarray(frames))
+    # analysis: waive(host-sync): fixture — the designated single copy
+    return np.asarray(dev)
+
+
+def _recount_run(fleet, work, cancel=None):
+    params, cfg = fleet.ground
+    for thresh, items in work.by_thresh.items():
+        if cancel is not None and cancel.is_set():
+            return
+        parts = [(seg.tiles_gd, down) for _, seg, down in items]
+        results = count_tiles_multi(params, cfg, parts, score_thresh=thresh)
+        if cancel is not None and cancel.is_set():
+            return
+        for (m, seg, down), (c, _) in zip(items, results):
+            seg.counts_gd = c
+    for m, seg, window in work.agg:
+        if cancel is not None and cancel.is_set():
+            return
+        m.contact_stages[3].run(m, seg, window)
+
+
+class GroundSegment:
+    def execute(self, rnd):
+        rnd.thread = threading.Thread(target=self._recount_job, args=(rnd,),
+                                      daemon=True)
+        rnd.thread.start()
+
+    def _recount_job(self, rnd):
+        try:
+            _recount_run(self.fleet, rnd.work, cancel=rnd.cancel)
+        except BaseException as e:
+            rnd.err = e

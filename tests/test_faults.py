@@ -36,7 +36,9 @@ SCENE = SceneSpec("faults", 384, (10, 18), (10, 24), cloud_fraction=0.25)
 # wall-clock/throughput summary keys that legitimately differ run-to-run
 TIMING_KEYS = ("ingest_s", "tiles_per_s", "tiles_per_s_per_sat", "contact_s",
                "windows_per_s", "bytes_downlinked_per_s", "recount_s",
-               "recount_wait_s", "recount_hidden_frac")
+               "recount_wait_s", "recount_hidden_frac",
+               "ingest_dispatch_s", "device_compute_s", "host_fetch_s",
+               "ingest_hidden_frac")
 
 
 @pytest.fixture(scope="module")

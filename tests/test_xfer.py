@@ -1,0 +1,105 @@
+"""Tests for repro.core.xfer — the content-keyed host->device transfer
+cache: counter correctness, the clear-at-capacity overflow policy, the
+large-array bypass, and thread safety under the GroundSegment
+worker-vs-foreground pattern."""
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core.xfer as xfer
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache():
+    """Each test starts from an empty cache and zeroed counters, and
+    leaves the module clean for the fleet tests that gate on them."""
+    xfer.clear_cache()
+    xfer.reset_transfer_stats()
+    yield
+    xfer.clear_cache()
+    xfer.reset_transfer_stats()
+
+
+def test_counters_track_puts_and_reuses():
+    a = np.arange(8, dtype=np.int32)
+    b = np.arange(8, dtype=np.float32)  # same shape, different dtype
+    da = xfer.device_constant(a)
+    db = xfer.device_constant(b)
+    assert xfer.transfer_stats() == {"device_puts": 2, "cache_reuses": 0}
+    # content-identical requests reuse the resident (fresh host buffer
+    # included — the key is by value, not identity)
+    assert xfer.device_constant(a) is da
+    assert xfer.device_constant(np.arange(8, dtype=np.int32)) is da
+    assert xfer.device_constant(b) is db
+    assert xfer.transfer_stats() == {"device_puts": 2, "cache_reuses": 3}
+    assert xfer.cache_size() == 2
+    np.testing.assert_array_equal(np.asarray(da), a)
+
+
+def test_overflow_clears_at_capacity(monkeypatch):
+    assert xfer._MAX_ENTRIES == 4096  # the documented production cap
+    monkeypatch.setattr(xfer, "_MAX_ENTRIES", 8)
+    for i in range(8):
+        xfer.device_constant(np.full(4, i, dtype=np.int64))
+    assert xfer.cache_size() == 8
+    # the 9th distinct value clears the full cache, then inserts itself
+    d = xfer.device_constant(np.full(4, 99, dtype=np.int64))
+    assert xfer.cache_size() == 1
+    assert xfer.transfer_stats()["device_puts"] == 9
+    # the survivor is the newcomer; evicted values re-upload
+    assert xfer.device_constant(np.full(4, 99, dtype=np.int64)) is d
+    xfer.device_constant(np.full(4, 0, dtype=np.int64))
+    assert xfer.transfer_stats() == {"device_puts": 10, "cache_reuses": 1}
+
+
+def test_large_arrays_bypass_cache_but_count():
+    big = np.zeros((xfer._MAX_ITEM_BYTES // 8) + 1, dtype=np.float64)
+    d1 = xfer.device_constant(big)
+    d2 = xfer.device_constant(big)
+    assert d1 is not d2
+    assert xfer.cache_size() == 0
+    assert xfer.transfer_stats() == {"device_puts": 2, "cache_reuses": 0}
+
+
+def test_thread_safety_under_worker_contention():
+    """Two threads hammer device_constant the way a recount worker and
+    the foreground round do: a shared pool of repeating control-plane
+    values plus per-thread unique ones. Every call must be accounted as
+    exactly one put or one reuse, with no exceptions and correct
+    values."""
+    shared = [np.arange(16, dtype=np.int32) + k for k in range(4)]
+    n_iters, errs = 200, []
+
+    def worker(tid):
+        try:
+            for i in range(n_iters):
+                arr = shared[i % len(shared)]
+                got = xfer.device_constant(arr)
+                np.testing.assert_array_equal(np.asarray(got), arr)
+                uniq = np.array([tid, i], dtype=np.int64)
+                xfer.device_constant(uniq)
+        except BaseException as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errs == []
+    stats = xfer.transfer_stats()
+    total_calls = 2 * n_iters * 2
+    assert stats["device_puts"] + stats["cache_reuses"] == total_calls
+    # the 4 shared values and the 400 unique ones were each put at least
+    # once; a racy double-put of a shared value is tolerated (both
+    # threads miss before either inserts) but reuses must dominate
+    assert stats["device_puts"] >= 404
+    assert stats["cache_reuses"] >= 300
+    assert xfer.cache_size() >= 404
+
+
+def test_record_transfer_counts_external_puts():
+    xfer.record_transfer()
+    xfer.record_transfer(3)
+    assert xfer.transfer_stats() == {"device_puts": 4, "cache_reuses": 0}
